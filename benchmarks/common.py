@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: dataset cache, timing, CSV emission."""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import validate
+from repro.data import gensort
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench")
+
+
+def dataset(n_records: int, skewed: bool) -> tuple[str, int]:
+    """Cached record file + its checksum."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    tag = f"{'skew' if skewed else 'unif'}_{n_records}"
+    path = os.path.join(CACHE_DIR, tag + ".bin")
+    sumpath = path + ".sum"
+    if not (os.path.exists(path) and os.path.exists(sumpath)):
+        gensort.write_file(path, n_records, skewed=skewed)
+        chk = validate.checksum(gensort.read_records(path, mmap=False))
+        with open(sumpath, "w") as f:
+            f.write(str(chk))
+    with open(sumpath) as f:
+        chk = int(f.read())
+    return path, chk
+
+
+def disk_bandwidth_mb_s(n_bytes: int = 200 << 20) -> float:
+    """Paper Fig. 2 reference line: read a file and immediately write it
+    back to the same filesystem."""
+    src = os.path.join(CACHE_DIR, "bw_src.bin")
+    dst = os.path.join(CACHE_DIR, "bw_dst.bin")
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    if not os.path.exists(src) or os.path.getsize(src) != n_bytes:
+        with open(src, "wb") as f:
+            f.write(np.random.default_rng(0).bytes(n_bytes))
+    t0 = time.perf_counter()
+    with open(src, "rb") as fi, open(dst, "wb") as fo:
+        while True:
+            buf = fi.read(1 << 22)
+            if not buf:
+                break
+            fo.write(buf)
+        fo.flush()
+        os.fsync(fo.fileno())
+    dt = time.perf_counter() - t0
+    os.unlink(dst)
+    return n_bytes / dt / 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,32 @@
+"""Paper Fig. 6: share of runtime per ELSAR phase (training must be <1-few
+%, partitioning the largest block)."""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks import common
+from repro.core import external
+
+
+def run(n_records: int = 1_000_000) -> dict:
+    path, _ = common.dataset(n_records, skewed=False)
+    with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+        stats = external.sort_file(path, out.name, memory_budget_bytes=64 << 20)
+    total = stats.total_seconds
+    return {
+        phase: {"seconds": s, "share_pct": 100 * s / total}
+        for phase, s in stats.phase_seconds.items()
+    }
+
+
+def main():
+    for phase, r in run().items():
+        common.emit(
+            f"fig6_phase_{phase}", r["seconds"] * 1e6,
+            f"share={r['share_pct']:.1f}%",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = wire_bytes_per_device / 50e9
+
+cost_analysis() reports per-partition (per-device) FLOPs/bytes after SPMD.
+Wire bytes come from the HLO collective ops with standard factors:
+AG (k-1)/k - RS (k-1) on the scattered result - AR 2(k-1)/k - A2A (k-1)/k
+- permute 1.  MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (fwd),
+and useful-compute = MODEL_FLOPS / (HLO_FLOPs x chips).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_WIRE_FACTOR = {
+    "all-gather": lambda k: (k - 1) / k,
+    "reduce-scatter": lambda k: (k - 1),  # result is the scattered shard
+    "all-reduce": lambda k: 2 * (k - 1) / k,
+    "all-to-all": lambda k: (k - 1) / k,
+    "collective-permute": lambda k: 1.0,
+}
+
+
+def count_params(arch: str) -> tuple[float, float]:
+    """(total, active) parameter counts from the arch config (analytic)."""
+    import jax
+
+    from repro.configs import registry
+    from repro.models.api import build_model
+
+    cfg = registry.get_config(arch)
+    model = build_model(cfg)
+    pspec = model.params_spec()
+    total = 0.0
+    expert = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pspec)[0]:
+        n = float(np.prod(leaf.shape))
+        total += n
+        name = [str(p.key) for p in path if hasattr(p, "key")]
+        if (
+            cfg.moe is not None
+            and name
+            and name[-1] in ("w_gate", "w_up", "w_down")
+            and len(leaf.shape) == 4  # (L, E, in, out) stacked experts
+        ):
+            expert += n
+    if cfg.moe is not None and expert > 0:
+        active = total - expert * (1 - cfg.moe.top_k / cfg.moe.n_experts)
+    else:
+        active = total
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import registry
+
+    shape = registry.get_shape(shape_name)
+    _, active = count_params(arch)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1
+    )
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec["flops_per_device"]
+    hbm = rec["bytes_accessed_per_device"]
+    wire = 0.0
+    for kind, c in rec.get("collectives", {}).items():
+        k = max(c.get("max_group", 1), 1)
+        wire += c["result_bytes"] * _WIRE_FACTOR[kind](k)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm / HBM_BW,
+        "collective_s": wire / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops * rec["n_chips"]
+    bound = max(terms.values())
+    # step time is bounded below by the dominant term; MFU at that bound:
+    #   hlo_mfu    — all executed dot flops count (includes remat/waste)
+    #   useful_mfu — only MODEL_FLOPS count (the §Perf score)
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "n_chips")},
+        **terms,
+        "bottleneck": dom.replace("_s", ""),
+        "model_flops": mf,
+        "useful_compute_frac": mf / hlo_total if hlo_total else 0.0,
+        "hlo_mfu": terms["compute_s"] / bound if bound else 0.0,
+        "useful_mfu": (mf / rec["n_chips"] / PEAK_FLOPS) / bound
+        if bound
+        else 0.0,
+        "hbm_gb": rec["memory"]["argument_bytes"] / 1e9
+        + rec["memory"]["temp_bytes"] / 1e9,
+    }
+
+
+def load(dirname: str) -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | useful % | useful MFU |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['bottleneck']}** "
+            f"| {100*r['useful_compute_frac']:.0f}% "
+            f"| {100*r['useful_mfu']:.1f}% |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.markdown:
+        print(markdown_table(rows))
+        return
+    for r in rows:
+        print(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0.0,"
+            f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+            f"coll={r['collective_s']:.2e}s dom={r['bottleneck']} "
+            f"useful={100*r['useful_compute_frac']:.0f}% "
+            f"roofline={100*r['roofline_frac']:.0f}%"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (+ roofline lines when the
+dry-run artifacts exist)."""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (
+        io_stats,
+        joulesort,
+        partition_variance,
+        phase_breakdown,
+        scalability,
+        sort_rates,
+    )
+
+    n = int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000))
+    suites = [
+        ("fig2_sort_rates", lambda: sort_rates.main()),
+        ("s33_fig3_partition_variance", lambda: partition_variance.main()),
+        ("fig4_scalability", lambda: scalability.main()),
+        ("fig5_joulesort", lambda: joulesort.main()),
+        ("fig6_phase_breakdown", lambda: phase_breakdown.main()),
+        ("fig7_io_stats", lambda: io_stats.main()),
+    ]
+    failures = 0
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},NaN,ERROR", file=sys.stderr)
+            traceback.print_exc()
+
+    # roofline lines (from dry-run artifacts, if present): baseline + opt
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    for tag, sub in (("base", "dryrun"), ("opt", "dryrun_opt")):
+        dr = os.path.join(base, sub)
+        if not os.path.isdir(dr):
+            continue
+        try:
+            from benchmarks import roofline
+
+            for r in roofline.load(dr):
+                print(
+                    f"roofline_{tag}_{r['arch']}_{r['shape']}_{r['mesh']},0.0,"
+                    f"dom={r['bottleneck']} useful={100*r['useful_compute_frac']:.0f}% "
+                    f"useful_mfu={100*r['useful_mfu']:.1f}%"
+                )
+        except Exception:
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

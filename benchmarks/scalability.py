@@ -1,0 +1,44 @@
+"""Paper Fig. 4 (scaled down): sorting rate as the input grows to multiples
+of the memory budget — the paper runs 5x..40x of RAM; we run 5x..40x of a
+small fixed budget so the same out-of-core machinery is exercised."""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks import common
+from repro.core import external, mergesort, validate
+from repro.data import gensort
+
+BUDGET = 16 << 20  # 16 MB "memory"
+
+
+def run(multipliers=(5, 10, 20, 40)) -> list[dict]:
+    rows = []
+    for mult in multipliers:
+        n = mult * BUDGET // gensort.RECORD_BYTES
+        path, chk = common.dataset(n, skewed=False)
+        for algo, fn in (("elsar", external.sort_file),
+                         ("extms", mergesort.sort_file)):
+            with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+                stats = fn(path, out.name, memory_budget_bytes=BUDGET)
+                assert validate.validate_file(out.name, chk, n)["ok"]
+                rows.append({
+                    "algo": algo,
+                    "x_memory": mult,
+                    "rate_mb_s": stats.rate_mb_s(),
+                })
+    return rows
+
+
+def main():
+    for r in run():
+        common.emit(
+            f"fig4_scalability_{r['algo']}_{r['x_memory']}x",
+            0.0,
+            f"rate={r['rate_mb_s']:.1f}MB/s",
+        )
+
+
+if __name__ == "__main__":
+    main()

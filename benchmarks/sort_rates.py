@@ -1,0 +1,44 @@
+"""Paper Fig. 2: sorting rates of ELSAR vs External Mergesort on this
+machine's storage, uniform + skewed, with the read+write disk-bandwidth
+reference line."""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks import common
+from repro.core import external, mergesort, validate
+
+
+def run(n_records: int = 1_000_000, budget=64 << 20) -> list[dict]:
+    rows = []
+    bw = common.disk_bandwidth_mb_s()
+    for skewed in (False, True):
+        path, chk = common.dataset(n_records, skewed)
+        for algo, fn in (("elsar", external.sort_file),
+                         ("extms", mergesort.sort_file)):
+            with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+                stats = fn(path, out.name, memory_budget_bytes=budget)
+                res = validate.validate_file(out.name, chk, n_records)
+                assert res["ok"], (algo, skewed, res)
+                rows.append({
+                    "algo": algo,
+                    "dist": "skewed" if skewed else "uniform",
+                    "rate_mb_s": stats.rate_mb_s(),
+                    "seconds": stats.total_seconds,
+                    "disk_bw_mb_s": bw,
+                })
+    return rows
+
+
+def main():
+    for r in run():
+        common.emit(
+            f"fig2_sort_rate_{r['algo']}_{r['dist']}",
+            r["seconds"] * 1e6,
+            f"rate={r['rate_mb_s']:.1f}MB/s bw={r['disk_bw_mb_s']:.0f}MB/s",
+        )
+
+
+if __name__ == "__main__":
+    main()

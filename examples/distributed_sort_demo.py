@@ -1,0 +1,68 @@
+"""Pod-scale partition-and-concatenate sort on 8 simulated devices:
+the paper's fragment-files-and-concatenation mapped onto one all-to-all
+(DESIGN.md §2).  Run directly — it re-execs itself with the XLA flag set.
+
+    PYTHONPATH=src python examples/distributed_sort_demo.py
+"""
+
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import distributed, encoding, rmi
+from repro.data import gensort
+
+
+def main():
+    n = 1 << 18  # 262k records across 8 devices
+    print(f"[1/4] generating {n} skewed records ...")
+    recs = gensort.make_records(n, skewed=True)
+    hi, lo = encoding.encode_np(recs[:, :10])
+
+    print("[2/4] training the CDF model on a 1% sample ...")
+    sample = recs[
+        np.random.default_rng(0).choice(n, n // 100, replace=False), :10
+    ]
+    model = rmi.fit(sample, n_leaf=4096)
+
+    print("[3/4] shard_map sort: route -> all_to_all -> LearnedSort ...")
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    fn = distributed.make_sort_fn(
+        mesh, ("data",), model, n_per_device=n // 8, use_kernels=False
+    )
+    sh = NamedSharding(mesh, P("data"))
+    args = [
+        jax.device_put(jnp.asarray(hi), sh),
+        jax.device_put(jnp.asarray(lo), sh),
+        jax.device_put(jnp.arange(n, dtype=jnp.int32), sh),
+    ]
+    hi_s, lo_s, val_s, n_valid, lost = fn(*args)
+    assert int(np.asarray(lost).sum()) == 0
+
+    print("[4/4] validating global order ...")
+    gh, gl, gv = distributed.global_sorted_from_shards(
+        hi_s, lo_s, val_s, n_valid, 8
+    )
+    o = np.lexsort((lo, hi))
+    assert (gh == hi[o]).all() and (gl == lo[o]).all()
+    nv = np.asarray(n_valid).ravel()
+    print(
+        f"OK: {n} records globally sorted across 8 devices; "
+        f"per-device load {nv.tolist()} (max/min "
+        f"{nv.max() / nv.min():.2f}) — equi-depth, no merge phase."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Arch registry: ``--arch <id>`` resolution for launchers and tests."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, shape_applicable
+
+ARCHS = {
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "yi-9b": "repro.configs.yi_9b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(ARCHS[name])
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells():
+    """Every applicable (arch, shape) dry-run cell + the documented skips."""
+    cells, skips = [], []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            (cells if ok else skips).append((arch, sname) if ok else (arch, sname, why))
+    return cells, skips

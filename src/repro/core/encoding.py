@@ -1,0 +1,109 @@
+"""Numeric embedding of ASCII keys (paper §4), TPU-adapted.
+
+The paper packs the first 9 key bytes as base-95 digits into a ``uint64``.
+TPUs (and default JAX) have no 64-bit integers, so we use an order-equivalent
+two-word encoding: the first 8 bytes packed big-endian (base-256) into a
+``(hi, lo)`` pair of ``uint32``.  For printable ASCII both encodings are
+strictly monotone in ``memcmp`` order, which is all the partitioner needs;
+ties beyond byte 8 are resolved by the touch-up comparator exactly as the
+paper's scheme resolves ties beyond byte 9 (see DESIGN.md §2).
+
+``encode_base95_u64`` reproduces the paper's exact encoding with Python ints
+(arbitrary precision) and is used only as a test oracle for
+order-equivalence.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Number of key bytes captured numerically by the (hi, lo) embedding.
+ENCODED_BYTES = 8
+
+# Sentinel that sorts after every real key (keys are printable ASCII < 0x80,
+# so 0xFFFFFFFF words can never be produced by ``encode``).
+SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def encode(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Encode ``(N, K) uint8`` keys into ``(hi, lo)`` uint32 words.
+
+    Keys shorter than 8 bytes are implicitly zero-padded (the paper sets
+    ``ASCII(x_i) = 0`` past the key end, §4).
+    """
+    k = keys.astype(jnp.uint32)
+    n, width = keys.shape
+    if width < ENCODED_BYTES:
+        pad = jnp.zeros((n, ENCODED_BYTES - width), dtype=jnp.uint32)
+        k = jnp.concatenate([k, pad], axis=1)
+    hi = (k[:, 0] << 24) | (k[:, 1] << 16) | (k[:, 2] << 8) | k[:, 3]
+    lo = (k[:, 4] << 24) | (k[:, 5] << 16) | (k[:, 6] << 8) | k[:, 7]
+    return hi, lo
+
+
+def encode_np(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """NumPy twin of :func:`encode` for the host-side (file) pipeline."""
+    k = keys.astype(np.uint32)
+    n, width = keys.shape
+    if width < ENCODED_BYTES:
+        k = np.concatenate(
+            [k, np.zeros((n, ENCODED_BYTES - width), dtype=np.uint32)], axis=1
+        )
+    hi = (k[:, 0] << 24) | (k[:, 1] << 16) | (k[:, 2] << 8) | k[:, 3]
+    lo = (k[:, 4] << 24) | (k[:, 5] << 16) | (k[:, 6] << 8) | k[:, 7]
+    return hi, lo
+
+
+def encode_base95_u64(key: bytes, length: int = 9) -> int:
+    """The paper's exact base-95 encoding (§4), as a Python big-int oracle.
+
+    ``sum_i (ASCII(x_i) - 32) * 95**(l - i)`` over the first ``length`` bytes.
+    Characters below 32 are clamped to 0 (the paper ignores control codes).
+    """
+    value = 0
+    for i in range(length):
+        c = key[i] if i < len(key) else 0
+        digit = max(0, c - 32)
+        value = value * 95 + digit
+    return value
+
+
+def feature_f32(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    min_hi: jnp.ndarray,
+    min_lo: jnp.ndarray,
+    inv_range: jnp.ndarray,
+) -> jnp.ndarray:
+    """Map ``(hi, lo)`` to a normalized f32 feature in [0, 1].
+
+    Subtraction happens in the integer domain (two-word subtract with
+    borrow) *before* float conversion so that inputs with a long shared
+    prefix (small hi-range) keep full precision from ``lo``.
+    """
+    below = (hi < min_hi) | ((hi == min_hi) & (lo < min_lo))
+    borrow = (lo < min_lo).astype(jnp.uint32)
+    dlo = lo - min_lo  # wrapping subtract is the correct low word
+    dhi = hi - min_hi - borrow
+    x = dhi.astype(jnp.float32) * jnp.float32(4294967296.0) + dlo.astype(
+        jnp.float32
+    )
+    # Keys below the sampled minimum must map to 0, not wrap around.
+    return jnp.where(below, 0.0, jnp.clip(x * inv_range, 0.0, 1.0))
+
+
+def feature_f64_np(
+    hi: np.ndarray, lo: np.ndarray, min_hi: int, min_lo: int, inv_range: float
+) -> np.ndarray:
+    """Float64 twin of :func:`feature_f32` used when *fitting* the model."""
+    below = (hi < np.uint32(min_hi)) | (
+        (hi == np.uint32(min_hi)) & (lo < np.uint32(min_lo))
+    )
+    borrow = (lo < np.uint32(min_lo)).astype(np.uint64)
+    dlo = (lo - np.uint32(min_lo)).astype(np.uint64)
+    dhi = (hi.astype(np.uint64) - np.uint64(min_hi) - borrow) & np.uint64(
+        0xFFFFFFFF
+    )
+    x = dhi.astype(np.float64) * 4294967296.0 + dlo.astype(np.float64)
+    return np.where(below, 0.0, np.clip(x * inv_range, 0.0, 1.0))

@@ -1,0 +1,164 @@
+"""Device-resident LearnedSort (paper §3.4, TPU-adapted).
+
+Pipeline (all fixed-shape, jit-able):
+  1. RMI predicts an equi-depth minor-bucket id per key (kernel: rmi.py),
+  2. a stable counting-sort permutation groups records by bucket
+     (``partition.bucket_matrix`` -> an (f, capacity) VMEM-tileable grid,
+     sentinel-padded),
+  3. each row is sorted independently by the bitonic touch-up kernel —
+     this simultaneously plays the role of the paper's InsertionSort
+     touch-up (fixing model prediction error *within* a bucket) and of the
+     base-case sorter,
+  4. rows are compacted back into one array (pure gather arithmetic — the
+     "concatenation" step).
+
+Monotone model + per-bucket sort => globally sorted (no merge), which is
+the paper's central claim transplanted to fixed-shape tensor land.
+
+Overflow: if any bucket exceeds ``capacity`` (can happen under extreme
+duplicate skew — same key => same bucket), a ``lax.cond`` falls back to a
+full ``lax.sort``.  This keeps the fast path data-oblivious and the
+algorithm unconditionally correct (the paper's LearnedSort handles the
+same pathology with its duplicate early-termination strategy).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition, rmi
+from repro.core.encoding import SENTINEL
+from repro.kernels import ops
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1)).bit_length()
+
+
+def _compact(
+    hi_m: jnp.ndarray,
+    lo_m: jnp.ndarray,
+    val_m: jnp.ndarray,
+    counts: jnp.ndarray,
+    n: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(f, c) sorted rows + per-row valid counts -> (n,) concatenated."""
+    f, c = hi_m.shape
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )
+    pos = jnp.arange(n, dtype=jnp.int32)
+    row = jnp.searchsorted(jnp.cumsum(counts), pos, side="right").astype(
+        jnp.int32
+    )
+    col = pos - jnp.take(starts, row)
+    flat = row * c + col
+    return (
+        jnp.take(hi_m.reshape(-1), flat),
+        jnp.take(lo_m.reshape(-1), flat),
+        jnp.take(val_m.reshape(-1), flat),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_buckets", "capacity_factor", "use_kernels")
+)
+def sort_device(
+    model: rmi.RMIParams,
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    *,
+    n_buckets: int = 0,
+    capacity_factor: float = 2.0,
+    use_kernels: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sort (hi, lo) ascending; returns (hi_sorted, lo_sorted, perm).
+
+    ``perm`` maps output position -> input position so callers can gather
+    payloads/records.
+    """
+    n = hi.shape[0]
+    if n_buckets == 0:
+        # target ~256-1024 wide touch-up rows
+        n_buckets = max(1, _next_pow2(n) // 512)
+    capacity = _next_pow2(int(n / n_buckets * capacity_factor) + 1)
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    if use_kernels:
+        bucket = ops.rmi_bucket(model, hi, lo, n_buckets)
+    else:
+        bucket = rmi.predict_bucket(model, hi, lo, n_buckets)
+
+    gather_idx, valid, counts = partition.bucket_matrix(
+        bucket, n_buckets, capacity
+    )
+    overflow = (counts > capacity).any()
+
+    def fast(_):
+        hi_m = jnp.where(valid, jnp.take(hi, gather_idx), SENTINEL)
+        lo_m = jnp.where(valid, jnp.take(lo, gather_idx), SENTINEL)
+        # padding slots carry val = n so that REAL records (val < n) win the
+        # val tiebreak against padding even when their keys are themselves
+        # sentinels (callers may feed sentinel-padded inputs)
+        val_m = jnp.where(valid, jnp.take(idx, gather_idx), jnp.int32(n))
+        if use_kernels:
+            hi_s, lo_s, val_s = ops.sort_rows(hi_m, lo_m, val_m)
+        else:
+            hi_s, lo_s, val_s = jax.lax.sort(
+                (hi_m, lo_m, val_m), dimension=1, num_keys=3, is_stable=False
+            )
+        return _compact(hi_s, lo_s, val_s, counts, n)
+
+    def fallback(_):
+        # full comparison sort — correct under any skew/duplicates
+        hs, ls, vs = jax.lax.sort((hi, lo, idx), num_keys=2, is_stable=True)
+        return hs, ls, vs
+
+    return jax.lax.cond(overflow, fallback, fast, operand=None)
+
+
+def sort_oracle(
+    hi: jnp.ndarray, lo: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reference comparison sort (the pure-jnp oracle for tests/benches)."""
+    idx = jnp.arange(hi.shape[0], dtype=jnp.int32)
+    return jax.lax.sort((hi, lo, idx), num_keys=2, is_stable=True)
+
+
+def sort_host(model: rmi.RMIParams, keys: "np.ndarray") -> "np.ndarray":
+    """Host (NumPy) LearnedSort for the CPU file pipeline: returns ``perm``
+    sorting ``keys`` (N, K u8) in memcmp order.
+
+    Same three steps as the device path, in vectorized NumPy:
+      1. RMI predicts an equi-depth minor bucket per key,
+      2. stable integer sort groups by bucket (NumPy uses radix for ints —
+         O(n)), i.e. the counting-sort placement,
+      3. touch-up: one stable mergesort pass over the full keys of the now
+         nearly-sorted array (timsort galloping ≈ linear here) fixes model
+         error AND bytes beyond the 8-byte embedding in a single step.
+
+    This replaced per-partition jit'd device sorts in external.sort_file —
+    measured 2.5x faster on this container (EXPERIMENTS §Perf: the device
+    path pays dispatch + host<->device copies per partition, which on a
+    CPU backend is pure overhead).
+    """
+    import numpy as np
+
+    from repro.core import encoding
+
+    n = keys.shape[0]
+    if n <= 1:
+        return np.arange(n)
+    hi, lo = encoding.encode_np(keys)
+    n_buckets = max(64, 1 << max(0, (n // 256 - 1)).bit_length())
+    b = rmi.predict_bucket_np(model, hi, lo, n_buckets)
+    perm = np.argsort(b, kind="stable")  # radix path for int keys
+    k = np.ascontiguousarray(keys[perm]).view(
+        [("k", f"S{keys.shape[1]}")]
+    )["k"].reshape(-1)
+    if (k[:-1] > k[1:]).any():
+        perm = perm[np.argsort(k, kind="stable")]
+    return perm

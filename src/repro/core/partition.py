@@ -1,0 +1,128 @@
+"""Equi-depth model-based partitioning (paper §3.3) + radix baseline.
+
+These primitives are the framework's routing layer: the external sorter, the
+pod-scale distributed sorter, and the MoE dispatch (models/moe.py) all share
+``take_by_bucket`` / ``bucket_matrix``.
+
+The TPU idiom for "thread-local fragment files" is a dense ``(n_buckets,
+capacity)`` matrix per device, padded with sentinels: mutually-exclusive
+working sets by construction (no locks), fixed shapes for XLA, and the
+equi-depth property of the learned model is exactly what keeps ``capacity``
+small (paper: -23% partition-size std-dev vs radix).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, rmi
+
+
+def bucket_histogram(bucket_ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Per-bucket counts, (n_buckets,) int32."""
+    return jnp.zeros(n_buckets, dtype=jnp.int32).at[bucket_ids].add(1)
+
+
+def take_by_bucket(bucket_ids: jnp.ndarray) -> jnp.ndarray:
+    """Stable counting-sort permutation: records grouped by bucket.
+
+    Returns ``perm`` with ``bucket_ids[perm]`` non-decreasing and original
+    order preserved within a bucket (the paper's append-to-fragment order).
+    """
+    n = bucket_ids.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    _, perm = jax.lax.sort((bucket_ids, iota), num_keys=1, is_stable=True)
+    return perm
+
+
+def bucket_offsets(
+    bucket_ids: jnp.ndarray, n_buckets: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(perm, starts, counts): grouped permutation + per-bucket extents."""
+    counts = bucket_histogram(bucket_ids, n_buckets)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, dtype=jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)]
+    )
+    perm = take_by_bucket(bucket_ids)
+    return perm, starts, counts
+
+
+def bucket_matrix(
+    bucket_ids: jnp.ndarray, n_buckets: int, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather indices arranging records into a ``(n_buckets, capacity)`` grid.
+
+    Returns ``(gather_idx, valid, counts)`` where ``gather_idx[b, c]`` indexes
+    the source array (arbitrary for invalid slots) and ``valid[b, c]`` marks
+    real records.  Records beyond ``capacity`` in an overflowing bucket are
+    NOT represented — callers must check ``counts > capacity`` and take a
+    fallback path (see learned_sort.sort_device).
+    """
+    perm, starts, counts = bucket_offsets(bucket_ids, n_buckets)
+    n = bucket_ids.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    sorted_buckets = jnp.take(bucket_ids, perm)
+    col = pos - jnp.take(starts, sorted_buckets)  # rank within bucket
+    in_cap = col < capacity
+    flat_slot = jnp.where(
+        in_cap, sorted_buckets * capacity + col, n_buckets * capacity
+    )
+    # scatter source index into the grid (extra slot absorbs overflow)
+    gather_idx = jnp.zeros(n_buckets * capacity + 1, dtype=jnp.int32)
+    valid = jnp.zeros(n_buckets * capacity + 1, dtype=jnp.bool_)
+    gather_idx = gather_idx.at[flat_slot].set(perm)
+    valid = valid.at[flat_slot].set(True)
+    # drop overflow slot; invalid entries keep gather_idx 0 (masked by caller)
+    return (
+        gather_idx[:-1].reshape(n_buckets, capacity),
+        valid[:-1].reshape(n_buckets, capacity),
+        counts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Radix (equi-width) partitioner — the baseline the paper compares against
+# (§3.3: "Radix-based partitioning looks at the most significant bytes").
+# ---------------------------------------------------------------------------
+
+
+def radix_bucket(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    n_buckets: int,
+    min_hi: jnp.ndarray,
+    min_lo: jnp.ndarray,
+    inv_range: jnp.ndarray,
+) -> jnp.ndarray:
+    """Equi-width bucket over the observed key range."""
+    x = encoding.feature_f32(hi, lo, min_hi, min_lo, inv_range)
+    return jnp.minimum((x * n_buckets).astype(jnp.int32), n_buckets - 1)
+
+
+def radix_bucket_np(hi: np.ndarray, lo: np.ndarray, n_buckets: int) -> np.ndarray:
+    """Host-side equi-width partitioner over the full uint64 key domain."""
+    x = hi.astype(np.float64) * 4294967296.0 + lo.astype(np.float64)
+    x = x / 18446744073709551616.0
+    return np.minimum((x * n_buckets).astype(np.int64), n_buckets - 1).astype(
+        np.int32
+    )
+
+
+def model_bucket_np(
+    params: rmi.RMIParams, hi: np.ndarray, lo: np.ndarray, n_buckets: int
+) -> np.ndarray:
+    return rmi.predict_bucket_np(params, hi, lo, n_buckets)
+
+
+def partition_size_stats(counts: np.ndarray) -> dict[str, float]:
+    """Mean/std statistics used for the paper's -23% variance claim (§3.3)."""
+    counts = np.asarray(counts, dtype=np.float64)
+    mean = counts.mean()
+    return {
+        "mean": float(mean),
+        "std": float(counts.std()),
+        "std_over_mean": float(counts.std() / mean) if mean > 0 else 0.0,
+        "max_over_mean": float(counts.max() / mean) if mean > 0 else 0.0,
+    }

@@ -1,0 +1,286 @@
+"""Recursive Model Index (RMI) CDF model (paper §3.1).
+
+Two-level RMI: a root linear model routes a key feature to one of ``n_leaf``
+leaf linear models; the selected leaf predicts the empirical CDF value.
+
+Structural monotonicity
+-----------------------
+ELSAR's correctness (partition invariant, paper Eq. 1) requires the *model*
+to be monotone non-decreasing: otherwise two keys could land in out-of-order
+partitions and concatenation would not yield a sorted file.  We enforce
+monotonicity by construction:
+
+* the root slope is clamped ``>= 0`` (leaf selection is non-decreasing),
+* each leaf's slope is clamped ``>= 0``,
+* each leaf's output is clamped to its own CDF band ``[b_j, b_{j+1}]``
+  (empirical CDF at the inter-leaf boundaries) — bands are ordered and
+  non-overlapping, so the composed model is globally monotone.
+
+Hierarchical f32 precision (TPU adaptation, DESIGN.md §2)
+---------------------------------------------------------
+Keys span a 64-bit space but TPU inference runs in f32 (24-bit mantissa).
+A single global float feature loses the low 40 bits whenever the key range
+is wide — under gensort-style skew that collapses every record of a spike
+into one bucket.  Instead, each leaf stores its own two-word integer offset
+``(min_hi, min_lo)`` and scale: the *routing* feature is coarse/global, but
+the *prediction* feature is leaf-local, so precision automatically
+concentrates where the data is dense — the same "assign high-density areas
+more nodes" mechanism the paper credits the RMI with (§3.1), extended to
+mantissa bits.
+
+Fitting runs in NumPy float64 on a host sample (paper: ~1 % sample capped
+at 10M); inference is pure JAX f32 with a fused Pallas kernel
+(src/repro/kernels/rmi.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RMIParams:
+    """Trained CDF model. All leaves are jnp arrays (device-resident, ~KBs)."""
+
+    # global feature normalization (root routing)
+    min_hi: jnp.ndarray  # () uint32
+    min_lo: jnp.ndarray  # () uint32
+    inv_range: jnp.ndarray  # () float32
+    # root linear model: leaf = clip(floor((x*rs + ri) * L))
+    root_slope: jnp.ndarray  # () float32
+    root_intercept: jnp.ndarray  # () float32
+    # leaf linear models + monotone clamp bands
+    leaf_slope: jnp.ndarray  # (L,) float32
+    leaf_intercept: jnp.ndarray  # (L,) float32
+    leaf_lo: jnp.ndarray  # (L,) float32
+    leaf_hi: jnp.ndarray  # (L,) float32
+    # per-leaf local feature frame (hierarchical precision)
+    leaf_min_hi: jnp.ndarray  # (L,) uint32
+    leaf_min_lo: jnp.ndarray  # (L,) uint32
+    leaf_inv_range: jnp.ndarray  # (L,) float32
+
+    @property
+    def n_leaf(self) -> int:
+        return self.leaf_slope.shape[0]
+
+    def ftable(self) -> jnp.ndarray:
+        """(L, 5) packed f32 leaf table for the Pallas kernel."""
+        return jnp.stack(
+            [
+                self.leaf_slope,
+                self.leaf_intercept,
+                self.leaf_lo,
+                self.leaf_hi,
+                self.leaf_inv_range,
+            ],
+            axis=1,
+        )
+
+    def utable(self) -> jnp.ndarray:
+        """(L, 2) packed u32 leaf offsets for the Pallas kernel."""
+        return jnp.stack([self.leaf_min_hi, self.leaf_min_lo], axis=1)
+
+
+def _linfit(x: np.ndarray, y: np.ndarray) -> tuple[float, float]:
+    """Least-squares line with slope clamped >= 0."""
+    if len(x) == 0:
+        return 0.0, 0.5
+    if len(x) == 1 or float(x.max() - x.min()) == 0.0:
+        return 0.0, float(y.mean())
+    xm, ym = x.mean(), y.mean()
+    denom = float(((x - xm) ** 2).sum())
+    slope = float(((x - xm) * (y - ym)).sum()) / denom
+    slope = max(slope, 0.0)
+    return slope, float(ym - slope * xm)
+
+
+def fit(
+    sample_keys: np.ndarray,
+    n_leaf: int = 1024,
+    max_sample: int = 10_000_000,
+) -> RMIParams:
+    """Train the CDF model on a host sample of ``(N, K) uint8`` keys.
+
+    The sample cap mirrors the paper (§6: sample size capped at 10M).
+    """
+    if sample_keys.shape[0] > max_sample:
+        idx = np.random.default_rng(0).choice(
+            sample_keys.shape[0], max_sample, replace=False
+        )
+        sample_keys = sample_keys[idx]
+    hi, lo = encoding.encode_np(sample_keys)
+    return fit_encoded(hi, lo, n_leaf=n_leaf)
+
+
+def fit_encoded(hi: np.ndarray, lo: np.ndarray, n_leaf: int = 1024) -> RMIParams:
+    """Fit from pre-encoded (hi, lo) words."""
+    n = hi.shape[0]
+    if n == 0:
+        raise ValueError("cannot fit CDF model on an empty sample")
+    order = np.lexsort((lo, hi))
+    hi_s, lo_s = hi[order], lo[order]
+    min_hi, min_lo = int(hi_s[0]), int(lo_s[0])
+    max_hi, max_lo = int(hi_s[-1]), int(lo_s[-1])
+    span = (max_hi - min_hi) * 4294967296.0 + (max_lo - min_lo)
+    inv_range = 1.0 / span if span > 0 else 1.0
+
+    x = encoding.feature_f64_np(hi_s, lo_s, min_hi, min_lo, inv_range)
+    y = (np.arange(n, dtype=np.float64) + 0.5) / n  # empirical CDF
+
+    # --- root: linear, slope >= 0 (fallback to identity ramp)
+    rs, ri = _linfit(x, y)
+    if rs <= 0.0:
+        rs, ri = 1.0, 0.0
+
+    # --- leaves (fully vectorized: the original per-leaf Python loop was
+    # 25-30% of total sort time at n_leaf=64k; see EXPERIMENTS §Perf)
+    leaf_of = np.clip((x * rs + ri) * n_leaf, 0, n_leaf - 1).astype(np.int64)
+
+    # CDF boundary between consecutive leaves = empirical CDF at the first
+    # sample routed to each leaf (empty leaves inherit the next boundary).
+    starts = np.searchsorted(leaf_of, np.arange(n_leaf), side="left")
+    ends = np.append(starts[1:], n)
+    counts = (ends - starts).astype(np.float64)
+    occupied = counts > 0
+    bounds = np.empty(n_leaf + 1)
+    bounds[:-1] = starts / n
+    bounds[-1] = 1.0
+    lo_band = bounds[:-1].copy()
+    hi_band = bounds[1:].copy()
+
+    # leaf-local feature frame: offset at the leaf's first sample, scaled
+    # by the leaf's own key span -> full precision inside dense regions.
+    first = np.where(occupied, starts, 0)
+    last = np.where(occupied, ends - 1, 0)
+    lmin_hi = hi_s[first].astype(np.uint32)
+    lmin_lo = lo_s[first].astype(np.uint32)
+    lspan = (hi_s[last].astype(np.float64) - hi_s[first].astype(np.float64)) \
+        * 4294967296.0 + (
+        lo_s[last].astype(np.float64) - lo_s[first].astype(np.float64)
+    )
+    linv = np.where(lspan > 0, 1.0 / np.maximum(lspan, 1e-300), 1.0)
+
+    # exact per-element local feature via integer deltas (vector mins)
+    lmh = lmin_hi[leaf_of]
+    lml = lmin_lo[leaf_of]
+    borrow = (lo_s < lml).astype(np.uint64)
+    dlo = (lo_s - lml).astype(np.uint64)
+    dhi = (hi_s.astype(np.uint64) - lmh.astype(np.uint64) - borrow) & np.uint64(
+        0xFFFFFFFF
+    )
+    xl = np.clip(
+        (dhi.astype(np.float64) * 4294967296.0 + dlo.astype(np.float64))
+        * linv[leaf_of],
+        0.0,
+        1.0,
+    )
+
+    # segmented least squares via reduceat (empty segments handled below)
+    red = lambda v: np.add.reduceat(v, np.minimum(starts, n - 1))
+    sx, sy = red(xl), red(y)
+    sxx, sxy = red(xl * xl), red(xl * y)
+    c = np.maximum(counts, 1.0)
+    var = sxx - sx * sx / c
+    cov = sxy - sx * sy / c
+    with np.errstate(divide="ignore", invalid="ignore"):
+        slopes = np.where(var > 1e-18, cov / np.maximum(var, 1e-300), 0.0)
+    slopes = np.maximum(slopes, 0.0)
+    intercepts = sy / c - slopes * sx / c
+    # degenerate / empty leaves: constant at band midpoint / lower bound
+    mid = 0.5 * (lo_band + hi_band)
+    intercepts = np.where(slopes == 0.0, np.where(occupied, mid, lo_band),
+                          intercepts)
+    slopes = np.where(occupied, slopes, 0.0)
+
+    f32 = lambda v: jnp.asarray(v, dtype=jnp.float32)
+    u32 = lambda v: jnp.asarray(v, dtype=jnp.uint32)
+    return RMIParams(
+        min_hi=u32(min_hi),
+        min_lo=u32(min_lo),
+        inv_range=f32(inv_range),
+        root_slope=f32(rs),
+        root_intercept=f32(ri),
+        leaf_slope=f32(slopes),
+        leaf_intercept=f32(intercepts),
+        leaf_lo=f32(lo_band),
+        leaf_hi=f32(hi_band),
+        leaf_min_hi=u32(lmin_hi),
+        leaf_min_lo=u32(lmin_lo),
+        leaf_inv_range=f32(linv),
+    )
+
+
+def predict_cdf(params: RMIParams, hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:
+    """Monotone CDF prediction F(x) in [0, 1] (pure jnp; kernel in ops.py)."""
+    x = encoding.feature_f32(hi, lo, params.min_hi, params.min_lo, params.inv_range)
+    n_leaf = params.n_leaf
+    leaf = jnp.clip(
+        ((x * params.root_slope + params.root_intercept) * n_leaf).astype(jnp.int32),
+        0,
+        n_leaf - 1,
+    )
+    s = jnp.take(params.leaf_slope, leaf)
+    i = jnp.take(params.leaf_intercept, leaf)
+    blo = jnp.take(params.leaf_lo, leaf)
+    bhi = jnp.take(params.leaf_hi, leaf)
+    xl = encoding.feature_f32(
+        hi,
+        lo,
+        jnp.take(params.leaf_min_hi, leaf),
+        jnp.take(params.leaf_min_lo, leaf),
+        jnp.take(params.leaf_inv_range, leaf),
+    )
+    return jnp.clip(xl * s + i, blo, bhi)
+
+
+def predict_bucket(
+    params: RMIParams, hi: jnp.ndarray, lo: jnp.ndarray, n_buckets: int
+) -> jnp.ndarray:
+    """Equi-depth bucket id in [0, n_buckets) (paper §3.3)."""
+    y = predict_cdf(params, hi, lo)
+    return jnp.minimum((y * n_buckets).astype(jnp.int32), n_buckets - 1)
+
+
+def predict_cdf_np(params: RMIParams, hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """NumPy twin for the host-side (file streaming) pipeline."""
+    p: Any = jax.tree.map(np.asarray, params)
+    x = encoding.feature_f64_np(
+        hi, lo, int(p.min_hi), int(p.min_lo), float(p.inv_range)
+    ).astype(np.float32)
+    n_leaf = len(p.leaf_slope)
+    leaf = np.clip(
+        ((x * p.root_slope + p.root_intercept) * n_leaf).astype(np.int32),
+        0,
+        n_leaf - 1,
+    )
+    xl = np.empty_like(x)
+    # vectorized per-record local frame
+    lmh = p.leaf_min_hi[leaf]
+    lml = p.leaf_min_lo[leaf]
+    below = (hi < lmh) | ((hi == lmh) & (lo < lml))
+    borrow = (lo < lml).astype(np.uint64)
+    dlo = (lo - lml).astype(np.uint64)
+    dhi = (hi.astype(np.uint64) - lmh.astype(np.uint64) - borrow) & np.uint64(
+        0xFFFFFFFF
+    )
+    xl = dhi.astype(np.float64) * 4294967296.0 + dlo.astype(np.float64)
+    xl = np.where(
+        below, 0.0, np.clip(xl * p.leaf_inv_range[leaf], 0.0, 1.0)
+    ).astype(np.float32)
+    y = xl * p.leaf_slope[leaf] + p.leaf_intercept[leaf]
+    return np.clip(y, p.leaf_lo[leaf], p.leaf_hi[leaf])
+
+
+def predict_bucket_np(
+    params: RMIParams, hi: np.ndarray, lo: np.ndarray, n_buckets: int
+) -> np.ndarray:
+    y = predict_cdf_np(params, hi, lo)
+    return np.minimum((y * n_buckets).astype(np.int32), n_buckets - 1)

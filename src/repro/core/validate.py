@@ -1,0 +1,48 @@
+"""valsort-equivalent output validation (paper §7.1 methodology):
+sortedness in memcmp order + content checksum + record conservation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import gensort
+
+
+def keys_view(records: np.ndarray) -> np.ndarray:
+    """Byte-string view of the keys for vectorized memcmp comparison."""
+    keys = np.ascontiguousarray(records[:, : gensort.KEY_BYTES])
+    return keys.view([("k", f"S{gensort.KEY_BYTES}")])["k"].reshape(-1)
+
+
+def is_sorted(records: np.ndarray) -> bool:
+    k = keys_view(records)
+    return bool((k[:-1] <= k[1:]).all())
+
+
+def checksum(records: np.ndarray) -> int:
+    """Order-invariant content checksum (sum of per-record FNV-ish hashes)."""
+    x = records.astype(np.uint64)
+    weights = (
+        np.arange(1, records.shape[1] + 1, dtype=np.uint64) * np.uint64(1099511628211)
+    )
+    per_record = (x * weights[None, :]).sum(axis=1, dtype=np.uint64)
+    per_record = per_record ^ (per_record >> np.uint64(13))
+    return int(per_record.sum(dtype=np.uint64))
+
+
+def validate(
+    output: np.ndarray, reference_checksum: int, n_expected: int
+) -> dict[str, bool]:
+    res = {
+        "sorted": is_sorted(output),
+        "count_ok": output.shape[0] == n_expected,
+        "checksum_ok": checksum(output) == reference_checksum,
+    }
+    res["ok"] = all(res.values())
+    return res
+
+
+def validate_file(out_path: str, reference_checksum: int, n_expected: int):
+    recs = gensort.read_records(out_path)
+    return validate(recs, reference_checksum, n_expected)

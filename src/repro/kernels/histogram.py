@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: bucket histogram via one-hot reduction.
+
+TPUs have no fast scatter-add; the MXU-native idiom for counting is a
+one-hot compare + reduction (an ``(R, B)`` one-hot contracted against ones).
+The output block is pinned to (0,) for every grid step and accumulated
+across steps — the canonical Pallas reduction pattern (init on step 0).
+
+VMEM per step: R*4 (ids) + R*B*4 (one-hot, materialized by the VPU) + B*4.
+With R=512, B=4096 that is ~8.4 MiB — inside v5e VMEM; callers with larger
+bucket counts shrink block_rows accordingly (ops.py does this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(ids_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]  # (R,)
+    n_buckets = out_ref.shape[0]
+    onehot = (
+        ids[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, n_buckets), 1)
+    ).astype(jnp.int32)
+    out_ref[...] += onehot.sum(axis=0)
+
+
+def histogram_pallas(
+    bucket_ids: jnp.ndarray,
+    n_buckets: int,
+    *,
+    block_rows: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = bucket_ids.shape[0]
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_buckets,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_buckets,), jnp.int32),
+        interpret=interpret,
+    )(bucket_ids)

@@ -1,0 +1,124 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the TPU target the kernels run compiled; on this CPU container they run
+in ``interpret=True`` mode (the kernel body executed per-block in Python),
+which is how they are validated against ref.py.  Set
+``REPRO_FORCE_PALLAS_COMPILED=1`` to force compiled mode (TPU hosts).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rmi as rmi_lib
+from repro.core.encoding import ENCODED_BYTES, SENTINEL
+from repro.kernels import bitonic, encode, histogram, rmi
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS_COMPILED"):
+        return False
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x: jnp.ndarray, multiple: int, fill) -> tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    padded = (n + multiple - 1) // multiple * multiple
+    if padded == n:
+        return x, n
+    pad_width = [(0, padded - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad_width, constant_values=fill), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def encode_keys(
+    keys: jnp.ndarray, *, block_rows: int = 1024
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, K) u8 keys -> (hi, lo) u32 via the encode kernel."""
+    n, w = keys.shape
+    if w < ENCODED_BYTES:
+        keys = jnp.pad(keys, ((0, 0), (0, ENCODED_BYTES - w)))
+    else:
+        keys = keys[:, :ENCODED_BYTES]
+    keys, n_orig = _pad_rows(keys, block_rows, 0)
+    hi, lo = encode.encode_pallas(
+        keys, block_rows=block_rows, interpret=_interpret()
+    )
+    return hi[:n_orig], lo[:n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_rows"))
+def rmi_bucket(
+    params: rmi_lib.RMIParams,
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    n_buckets: int,
+    *,
+    block_rows: int = 1024,
+) -> jnp.ndarray:
+    """Fused RMI inference + equi-depth bucket id."""
+    ints = jnp.stack([params.min_hi, params.min_lo])
+    consts = jnp.stack(
+        [
+            params.inv_range,
+            params.root_slope,
+            params.root_intercept,
+            jnp.float32(n_buckets),
+        ]
+    )
+    hi_p, n_orig = _pad_rows(hi, block_rows, 0)
+    lo_p, _ = _pad_rows(lo, block_rows, 0)
+    out = rmi.rmi_bucket_pallas(
+        hi_p,
+        lo_p,
+        ints,
+        consts,
+        params.ftable(),
+        params.utable(),
+        block_rows=block_rows,
+        interpret=_interpret(),
+    )
+    return out[:n_orig]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_rows"))
+def bucket_histogram(
+    bucket_ids: jnp.ndarray, n_buckets: int, *, block_rows: int = 512
+) -> jnp.ndarray:
+    # keep the one-hot tile under ~8 MiB of VMEM
+    while block_rows * n_buckets * 4 > 8 * 1024 * 1024 and block_rows > 8:
+        block_rows //= 2
+    ids, _ = _pad_rows(bucket_ids, block_rows, -1)  # -1 never matches a bucket
+    return histogram.histogram_pallas(
+        ids, n_buckets, block_rows=block_rows, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def sort_rows(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    block_rows: int = 8,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Row-wise (hi, lo)-ascending bitonic sort; rows padded to pow2 width."""
+    r, c = hi.shape
+    c_pow2 = 1 << (c - 1).bit_length()
+    if c_pow2 != c:
+        padk = ((0, 0), (0, c_pow2 - c))
+        hi = jnp.pad(hi, padk, constant_values=SENTINEL)
+        lo = jnp.pad(lo, padk, constant_values=SENTINEL)
+        # max-val padding loses every (key, val) tiebreak against real data
+        val = jnp.pad(val, padk, constant_values=jnp.iinfo(jnp.int32).max)
+    block_rows = max(1, min(block_rows, r))
+    while r % block_rows:
+        block_rows -= 1
+    hi_s, lo_s, val_s = bitonic.sort_rows_pallas(
+        hi, lo, val, block_rows=block_rows, interpret=_interpret()
+    )
+    return hi_s[:, :c], lo_s[:, :c], val_s[:, :c]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding, rmi
+
+
+def encode_ref(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, K) u8 -> (hi, lo) u32."""
+    return encoding.encode(keys)
+
+
+def rmi_bucket_ref(
+    params: rmi.RMIParams, hi: jnp.ndarray, lo: jnp.ndarray, n_buckets: int
+) -> jnp.ndarray:
+    return rmi.predict_bucket(params, hi, lo, n_buckets)
+
+
+def histogram_ref(bucket_ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    return jnp.zeros(n_buckets, dtype=jnp.int32).at[bucket_ids].add(1)
+
+
+def sort_rows_ref(
+    hi: jnp.ndarray, lo: jnp.ndarray, val: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Row-wise lexicographic sort by (hi, lo) — val is carried."""
+    return jax.lax.sort((hi, lo, val), dimension=1, num_keys=2, is_stable=True)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused 2-level RMI CDF inference + bucket id.
+
+Fuses the global (routing) feature, the root linear model, the leaf gather,
+the leaf-local feature reconstruction (per-leaf integer offset + scale —
+the hierarchical-precision scheme of core/rmi.py), the leaf FMA and the
+band clamp into one VMEM-resident pass — the paper's per-record prediction
+hot path (§3.3).
+
+Both leaf tables are pinned whole into VMEM (index_map -> block (0, 0)):
+``(L, 5) f32`` + ``(L, 2) u32`` = 28 KiB at the default L=1024.  Per grid
+step: block_rows * 8 B of key words + tables + block_rows * 4 B out
+≈ 44 KiB VMEM at block_rows=1024 — small enough for deep double-buffering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _feature(hi, lo, min_hi, min_lo, inv_range):
+    below = (hi < min_hi) | ((hi == min_hi) & (lo < min_lo))
+    borrow = (lo < min_lo).astype(jnp.uint32)
+    dlo = lo - min_lo
+    dhi = hi - min_hi - borrow
+    x = dhi.astype(jnp.float32) * jnp.float32(4294967296.0) + dlo.astype(
+        jnp.float32
+    )
+    return jnp.where(below, 0.0, jnp.clip(x * inv_range, 0.0, 1.0))
+
+
+def _rmi_kernel(hi_ref, lo_ref, ints_ref, consts_ref, ft_ref, ut_ref, bucket_ref):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    min_hi = ints_ref[0]
+    min_lo = ints_ref[1]
+    inv_range = consts_ref[0]
+    root_slope = consts_ref[1]
+    root_intercept = consts_ref[2]
+    n_buckets = consts_ref[3]
+    ftable = ft_ref[...]  # (L, 5): slope, icept, band_lo, band_hi, inv_range
+    utable = ut_ref[...]  # (L, 2): leaf_min_hi, leaf_min_lo
+    n_leaf = ftable.shape[0]
+
+    # root routing on the coarse global feature
+    x = _feature(hi, lo, min_hi, min_lo, inv_range)
+    leaf = jnp.clip(
+        ((x * root_slope + root_intercept) * n_leaf).astype(jnp.int32),
+        0,
+        n_leaf - 1,
+    )
+    frow = jnp.take(ftable, leaf, axis=0)  # (R, 5)
+    urow = jnp.take(utable, leaf, axis=0)  # (R, 2)
+
+    # leaf-local feature (full f32 precision inside the leaf's key span)
+    xl = _feature(hi, lo, urow[:, 0], urow[:, 1], frow[:, 4])
+    y = jnp.clip(xl * frow[:, 0] + frow[:, 1], frow[:, 2], frow[:, 3])
+    bucket_ref[...] = jnp.minimum(
+        (y * n_buckets).astype(jnp.int32), n_buckets.astype(jnp.int32) - 1
+    )
+
+
+def rmi_bucket_pallas(
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    ints: jnp.ndarray,  # (2,) uint32: [min_hi, min_lo]
+    consts: jnp.ndarray,  # (4,) f32: [inv_range, root_slope, root_icept, n_buckets]
+    ftable: jnp.ndarray,  # (L, 5) f32
+    utable: jnp.ndarray,  # (L, 2) u32
+    *,
+    block_rows: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = hi.shape[0]
+    assert n % block_rows == 0, (n, block_rows)
+    n_leaf = ftable.shape[0]
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _rmi_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((n_leaf, 5), lambda i: (0, 0)),
+            pl.BlockSpec((n_leaf, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(hi, lo, ints, consts, ftable, utable)

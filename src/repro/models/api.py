@@ -1,0 +1,109 @@
+"""Public model API: ``build_model(cfg)`` returns a Model facade with
+init / loss / prefill / decode plus dry-run ``input_specs`` (pure
+ShapeDtypeStructs — nothing is allocated)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable  # (params, batch) -> (loss, metrics)
+    prefill: Callable  # (params, batch) -> (last_logits, cache)
+    decode_step: Callable  # (params, cache, tokens) -> (next, cache)
+    init_cache: Callable  # (batch, max_seq) -> cache
+
+    # ---- dry-run specs -----------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of `shape`."""
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, self._text_len(s)), i32)}
+            if cfg.frontend != "none":
+                specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_frontend_tokens, self._front_d()), jnp.float32
+                )
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, self._text_len(s)), i32)}
+            if cfg.frontend != "none":
+                specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_frontend_tokens, self._front_d()), jnp.float32
+                )
+            return specs
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        raise ValueError(shape.kind)
+
+    def _text_len(self, s: int) -> int:
+        # VLM: image tokens are part of the seq budget
+        if self.cfg.frontend == "vit":
+            return s - self.cfg.n_frontend_tokens
+        return s
+
+    def _front_d(self) -> int:
+        return self.cfg.d_frontend or self.cfg.d_model
+
+    def params_spec(self):
+        return jax.eval_shape(lambda: self.init_params(jax.random.key(0)))
+
+    def cache_spec(self, shape: ShapeConfig):
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len)
+        )
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.enc_dec:
+        def _prefill(params, batch, max_seq=None):
+            return encdec.prefill(
+                cfg,
+                params,
+                batch["tokens"],
+                batch["frontend_embeds"],
+                max_seq=max_seq,
+            )
+
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(cfg, key),
+            loss_fn=lambda params, batch: encdec.loss_fn(cfg, params, batch),
+            prefill=_prefill,
+            decode_step=lambda params, cache, tokens: encdec.decode_step(
+                cfg, params, cache, tokens
+            ),
+            init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+        )
+
+    def _prefill(params, batch, max_seq=None):
+        return transformer.prefill(
+            cfg,
+            params,
+            batch["tokens"],
+            batch.get("frontend_embeds"),
+            max_seq=max_seq,
+        )
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: transformer.init_params(cfg, key),
+        loss_fn=lambda params, batch: transformer.loss_fn(cfg, params, batch),
+        prefill=_prefill,
+        decode_step=lambda params, cache, tokens: transformer.decode_step(
+            cfg, params, cache, tokens
+        ),
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+    )

@@ -1,0 +1,221 @@
+"""Whisper-style encoder-decoder assembly (backbone only; the mel/conv
+frontend is a stub — ``input_specs`` supplies precomputed frame embeddings
+(B, n_frames, d_model), per the assignment)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, transformer
+from repro.models.transformer import _slot
+
+
+def enc_plan(cfg):
+    return [(cfg.n_enc_layers, ("attn_bidir", "mlp"))]
+
+
+def init_params(cfg, key):
+    keys = jax.random.split(key, 4)
+    d, v = cfg.d_model, cfg.vocab
+    params = {
+        "embed": layers.he_init(keys[0], (v, d)),
+        "enc_norm": jnp.ones((d,), jnp.float32),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": layers.he_init(keys[1], (d, v)),
+    }
+
+    def stack(plan, key):
+        groups = []
+        for n_repeat, period in plan:
+            key, sub = jax.random.split(key)
+
+            def one(k):
+                ks = jax.random.split(k, len(period))
+                return {
+                    _slot(i, kind): transformer.init_sublayer(kind, ks[i], cfg)
+                    for i, kind in enumerate(period)
+                }
+
+            groups.append(jax.vmap(one)(jax.random.split(sub, n_repeat)))
+        return groups
+
+    params["enc_groups"] = stack(enc_plan(cfg), keys[2])
+    params["dec_groups"] = stack(cfg.layer_plan(), keys[3])
+    return params
+
+
+def encode(cfg, params, frames):
+    """frames (B, T, D) stub embeddings -> encoder states."""
+    x = frames.astype(layers.COMPUTE_DTYPE)
+    x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    for (n_repeat, period), gparams in zip(enc_plan(cfg), params["enc_groups"]):
+
+        def body(x, p_slice):
+            for i, kind in enumerate(period):
+                x, _, _ = transformer.apply_sublayer_seq(
+                    kind, p_slice[_slot(i, kind)], cfg, x, positions,
+                    want_cache=False,
+                )
+            return x, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, gparams)
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def cross_caches(cfg, params, enc_out):
+    """Per-decoder-layer cross K/V (stacked over the scan axis)."""
+    caches = []
+    for (n_repeat, period), gparams in zip(cfg.layer_plan(), params["dec_groups"]):
+        ch = {}
+        for i, kind in enumerate(period):
+            if kind != "cross":
+                continue
+            slot = _slot(i, kind)
+
+            def one(p):
+                return attention.encode_cross_kv(p, cfg, enc_out)
+
+            ch[slot] = jax.vmap(one)(gparams[slot])
+        caches.append(ch)
+    return caches
+
+
+def decoder_forward(cfg, params, tokens, cross, *, remat: bool = True):
+    """Teacher-forced decoder (training path)."""
+    x = params["embed"].astype(layers.COMPUTE_DTYPE)[tokens]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    for (n_repeat, period), gparams, gcross in zip(
+        cfg.layer_plan(), params["dec_groups"], cross
+    ):
+
+        def body(x, inputs):
+            p_slice, c_slice = inputs
+            for i, kind in enumerate(period):
+                slot = _slot(i, kind)
+                if kind == "cross":
+                    x = attention.attend_cross(p_slice[slot], cfg, x, c_slice[slot])
+                else:
+                    x, _, _ = transformer.apply_sublayer_seq(
+                        kind, p_slice[slot], cfg, x, positions, want_cache=False
+                    )
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, (gparams, gcross))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return logits
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = True):
+    frames, tokens = batch["frontend_embeds"], batch["tokens"]
+    enc = encode(cfg, params, frames)
+    cross = cross_caches(cfg, params, enc)
+    logits = decoder_forward(cfg, params, tokens, cross, remat=remat)
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, tokens[:, 1:, None], axis=-1)[..., 0]
+    loss = nll.mean()
+    return loss, {"loss": loss}
+
+
+def prefill(cfg, params, tokens, frames, max_seq: int | None = None):
+    """Encoder pass + decoder prompt pass -> (last_logits, cache)."""
+    enc = encode(cfg, params, frames)
+    cross = cross_caches(cfg, params, enc)
+    x = params["embed"].astype(layers.COMPUTE_DTYPE)[tokens]
+    s = tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    groups = []
+    for (n_repeat, period), gparams, gcross in zip(
+        cfg.layer_plan(), params["dec_groups"], cross
+    ):
+
+        def body(x, inputs):
+            p_slice, c_slice = inputs
+            caches = dict(c_slice)  # keep cross K/V in the cache pytree
+            for i, kind in enumerate(period):
+                slot = _slot(i, kind)
+                if kind == "cross":
+                    x = attention.attend_cross(p_slice[slot], cfg, x, c_slice[slot])
+                elif kind == "attn":
+                    x, c, _ = transformer.apply_sublayer_seq(
+                        kind, p_slice[slot], cfg, x, positions, want_cache=True
+                    )
+                    if max_seq is not None and c["k"].shape[1] < max_seq:
+                        pad = max_seq - c["k"].shape[1]
+                        c = {
+                            k2: jnp.pad(v2, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                            for k2, v2 in c.items()
+                        }
+                    caches[slot] = c
+                else:
+                    x, _, _ = transformer.apply_sublayer_seq(
+                        kind, p_slice[slot], cfg, x, positions, want_cache=False
+                    )
+            return x, caches
+
+        x, caches = jax.lax.scan(body, x, (gparams, gcross))
+        groups.append(caches)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.einsum(
+        "bd,dv->bv", x[:, -1], params["lm_head"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return last, {"groups": groups, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg, params, cache, tokens):
+    pos = cache["pos"]
+    x = params["embed"].astype(layers.COMPUTE_DTYPE)[tokens]
+    new_groups = []
+    for (n_repeat, period), gparams, gcache in zip(
+        cfg.layer_plan(), params["dec_groups"], cache["groups"]
+    ):
+
+        def body(x, inputs):
+            p_slice, c_slice = inputs
+            new_c = dict(c_slice)
+            for i, kind in enumerate(period):
+                slot = _slot(i, kind)
+                x, nc = transformer.apply_sublayer_step(
+                    kind, p_slice[slot], cfg, x, c_slice.get(slot), pos
+                )
+                if slot in new_c and nc is not None:
+                    new_c[slot] = nc
+            return x, new_c
+
+        x, new_gcache = jax.lax.scan(body, x, (gparams, gcache))
+        new_groups.append(new_gcache)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, {"groups": new_groups, "pos": pos + 1}
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    """Decoder cache incl. zero cross K/V placeholders (filled by prefill)."""
+    groups = []
+    for n_repeat, period in cfg.layer_plan():
+        ch = {}
+        for i, kind in enumerate(period):
+            slot = _slot(i, kind)
+            if kind == "attn":
+                c = attention.init_cache(cfg, batch, max_seq)
+            elif kind == "cross":
+                c = attention.init_cache(cfg, batch, cfg.n_frontend_tokens)
+            else:
+                continue
+            ch[slot] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_repeat,) + a.shape), c
+            )
+        groups.append(ch)
+    return {"groups": groups, "pos": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,105 @@
+"""Shared building blocks: norms, RoPE, SwiGLU MLP, initializers.
+
+Conventions used across the model stack:
+  * parameters are stored in f32; activations/compute are bf16 with f32
+    softmax/normalizer accumulations (``preferred_element_type``),
+  * every sublayer is pre-norm + residual,
+  * weight layouts are chosen so the "wide" axis is last (TP over "model")
+    and the d_model axis shards over "data" (FSDP); see sharding/rules.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def he_init(key, shape, scale: float = 1.0, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / (fan_in**0.5)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jnp.ndarray, d_head: int, theta: float):
+    """positions (...,) -> cos/sin (..., d_head/2) in f32."""
+    half = d_head // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, d_head); cos/sin (..., S, d_head/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Classic transformer sinusoids (whisper-style encoder)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": he_init(k1, (d_model, d_ff)),
+        "w_up": he_init(k2, (d_model, d_ff)),
+        "w_down": he_init(k3, (d_ff, d_model)),
+    }
+
+
+def apply_mlp(p, x):
+    g = jnp.einsum(
+        "...d,df->...f", x, p["w_gate"].astype(x.dtype),
+        preferred_element_type=x.dtype,
+    )
+    u = jnp.einsum(
+        "...d,df->...f", x, p["w_up"].astype(x.dtype),
+        preferred_element_type=x.dtype,
+    )
+    return jnp.einsum(
+        "...f,fd->...d", silu(g) * u, p["w_down"].astype(x.dtype),
+        preferred_element_type=x.dtype,
+    )

@@ -1,0 +1,185 @@
+"""Mamba (S6) block for the Jamba hybrid (arXiv:2312.00752 / 2403.19887).
+
+Training uses a *chunked* selective scan: within a chunk of length
+``CHUNK`` the recurrence runs as an associative scan (parallel on the VPU),
+across chunks a ``lax.scan`` carries the (B, Di, N) state.  This bounds the
+materialized state tensor to (B, CHUNK, Di, N) — the full-sequence
+associative scan would need S/CHUNK times that memory — while keeping
+S/CHUNK, not S, sequential steps.  Decode is the O(1) single-step update
+with a (conv window, ssm state) cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+CHUNK = 256
+
+
+def dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    n = cfg.mamba.d_state
+    r = dt_rank(cfg)
+    dc = cfg.mamba.d_conv
+    keys = jax.random.split(key, 6)
+    # S4-style A init: -(1..N) per channel
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "in_proj": layers.he_init(keys[0], (d, 2 * di)),
+        "conv_w": layers.he_init(keys[1], (dc, di), scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": layers.he_init(keys[2], (di, r + 2 * n)),
+        "dt_proj": layers.he_init(keys[3], (r, di)),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jax.random.uniform(keys[4], (di,), minval=1e-3, maxval=1e-1)
+            )
+            - 1.0
+        ),  # softplus^-1 of dt init
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.he_init(keys[5], (di, d)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along S via shifted adds (d_conv taps).
+
+    x (B,S,Di); w (dc,Di).  With ``state`` (B, dc-1, Di) the prefix taps
+    come from the cache (decode path S=1).
+    """
+    dc = w.shape[0]
+    out = x * w[-1][None, None, :]
+    for tap in range(1, dc):
+        if state is None:
+            shifted = jnp.pad(x, ((0, 0), (tap, 0), (0, 0)))[:, : x.shape[1]]
+        else:
+            shifted = jnp.concatenate([state[:, -tap:], x], axis=1)[
+                :, : x.shape[1]
+            ]
+        out = out + shifted * w[-1 - tap][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(p, cfg, xc):
+    """Common projections: returns (da (B,S,Di,N) decay, db (B,S,Di,N)
+    input, c (B,S,N), d_skip)."""
+    n = cfg.mamba.d_state
+    r = dt_rank(cfg)
+    dt_bcn = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"].astype(xc.dtype))
+    dt_r, b_ssm, c_ssm = (
+        dt_bcn[..., :r],
+        dt_bcn[..., r : r + n],
+        dt_bcn[..., r + n :],
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"].astype(xc.dtype)).astype(
+            jnp.float32
+        )
+        + p["dt_bias"][None, None, :]
+    )  # (B,S,Di) f32
+    a = -jnp.exp(p["A_log"])  # (Di,N)
+    da = jnp.exp(dt[..., None] * a[None, None])  # decay in (0,1]
+    db = (dt * xc.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[
+        :, :, None, :
+    ]  # (B,S,Di,N)
+    return da, db, c_ssm.astype(jnp.float32), p["D"]
+
+
+def _chunk_scan(da, db):
+    """Associative scan within a chunk: h_t = da_t * h_{t-1} + db_t."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    return jax.lax.associative_scan(combine, (da, db), axis=1)
+
+
+def apply_mamba(p, cfg, x, cache=None, pos=None, *, return_state: bool = False):
+    """Full-sequence (train/prefill) if cache is None, else one-step decode.
+
+    cache = {"conv": (B, dc-1, Di), "ssm": (B, Di, N)};
+    ``return_state=True`` (prefill) also returns the final recurrent state.
+    """
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    di = d_inner(cfg)
+    xz = jnp.einsum("bsd,de->bse", xn, p["in_proj"].astype(xn.dtype))
+    xi, z = xz[..., :di], xz[..., di:]
+
+    if cache is None:
+        xc = layers.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+        b, s = x.shape[0], x.shape[1]
+        n = cfg.mamba.d_state
+        pad = (-s) % CHUNK
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0))) if pad else xc
+        nchunks = xc_p.shape[1] // CHUNK
+        # gate tensors (B, CHUNK, Di, N) are computed INSIDE the chunk loop:
+        # materializing them for the whole sequence would need S/CHUNK times
+        # the memory (137 GB at 32k prefill for jamba-sized Di)
+        xc_c = xc_p.reshape(b, nchunks, CHUNK, di).transpose(1, 0, 2, 3)
+        # validity mask: padded steps become the recurrence identity
+        # (da=1, db=0) so the carried state stays exact past the true end
+        valid = (jnp.arange(nchunks * CHUNK) < s).reshape(nchunks, CHUNK)
+
+        def step(h0, inp):
+            xck, vld = inp
+            da, db, c, d_skip = _ssm_inputs(p, cfg, xck)
+            m = vld[None, :, None, None]
+            da = jnp.where(m, da, 1.0)
+            db = jnp.where(m, db, 0.0)
+            acc_a, acc_b = _chunk_scan(da, db)
+            h = acc_a * h0[:, None] + acc_b  # inject carry
+            y = jnp.einsum("bsdn,bsn->bsd", h, c) + d_skip[
+                None, None
+            ] * xck.astype(jnp.float32)
+            return h[:, -1], y.astype(x.dtype)
+
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (xc_c, valid))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, nchunks * CHUNK, di)[:, :s]
+        new_cache = None
+        if return_state:
+            conv_tail = xi[:, -(cfg.mamba.d_conv - 1):]
+            new_cache = {"conv": conv_tail, "ssm": hT}
+    else:
+        # decode: single token, O(1) state update
+        conv_in = jnp.concatenate([cache["conv"], xi], axis=1)  # (B, dc, Di)
+        xc = layers.silu(
+            jnp.einsum("btd,td->bd", conv_in, p["conv_w"].astype(xi.dtype))
+            + p["conv_b"][None, :]
+        )[:, None, :]
+        da, db, c, d_skip = _ssm_inputs(p, cfg, xc)
+        h = da[:, 0] * cache["ssm"] + db[:, 0]  # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c[:, 0])[:, None] + d_skip[
+            None, None
+        ] * xc.astype(jnp.float32)
+        new_cache = {"conv": conv_in[:, 1:], "ssm": h}
+
+    out = y.astype(x.dtype) * layers.silu(z)
+    out = jnp.einsum("bsd,de->bse", out, p["out_proj"].astype(x.dtype))
+    return x + out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=layers.COMPUTE_DTYPE):
+    di = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba.d_state), jnp.float32),
+    }

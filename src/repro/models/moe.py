@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with *sort-based dispatch*.
+
+This is where the paper's technique lands inside the transformer stack
+(DESIGN.md §4): routing T tokens to E experts with a capacity bound is the
+same partition-shuffle-process-concatenate problem ELSAR solves for
+records.  The dispatch below literally reuses ``core.partition``:
+
+  expert id        = bucket id (here from a learned router instead of a
+                     learned CDF — both are order-preserving "models")
+  bucket_matrix    = the (E, capacity) dispatch grid with sentinel slots
+  counts/capacity  = the paper's equi-depth capacity argument: balanced
+                     buckets are what make a small capacity factor safe
+  combine          = the weighted scatter-back (concatenation analogue)
+
+Aux losses (Switch-style load balance + router z-loss) keep routing near
+equi-depth at train time — the MoE twin of ELSAR's model-accuracy story.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition
+from repro.models import layers
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    keys = jax.random.split(key, 5)
+    p = {
+        "norm": jnp.ones((d,), jnp.float32),
+        "router": layers.he_init(keys[0], (d, e)),
+        "w_gate": layers.he_init(keys[1], (e, d, f)),
+        "w_up": layers.he_init(keys[2], (e, d, f)),
+        "w_down": layers.he_init(keys[3], (e, f, d)),
+    }
+    if m.n_shared > 0:
+        p["shared"] = layers.init_mlp(keys[4], d, m.d_ff_expert * m.n_shared)
+    return p
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def apply_moe(p, cfg, x, *, capacity_factor: float | None = None):
+    """x (B, S, D) -> (out (B, S, D), aux_metrics dict)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.n_experts, m.top_k
+    cap_f = capacity_factor if capacity_factor is not None else m.capacity_factor
+    capacity = _round_up(max(int(t * k / e * cap_f), 8), 8)
+
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps).reshape(t, d)
+    logits = jnp.einsum(
+        "td,de->te", xn, p["router"].astype(xn.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch (shared machinery with the ELSAR sorter)
+    flat_e = top_e.reshape(t * k).astype(jnp.int32)
+    gather_idx, valid, counts = partition.bucket_matrix(flat_e, e, capacity)
+    token_of_slot = gather_idx // k  # (E, C) source token per dispatch slot
+    w_of_slot = jnp.where(
+        valid, top_p.reshape(t * k)[gather_idx], 0.0
+    )  # (E, C) combine weights (0 for padding/overflow)
+
+    xe = jnp.where(
+        valid[..., None], xn[token_of_slot], 0.0
+    )  # (E, C, D) dispatched activations
+
+    from repro.sharding import rules
+
+    if rules.opt_sharding_enabled() and e % 16 == 0:
+        # expert parallelism (§Perf iteration 5): dispatch slots sharded by
+        # expert over "model" — each chip runs its own experts' FFN locally
+        # and the dispatch/combine become all-to-all-shaped transfers,
+        # exactly the ELSAR shuffle pattern (DESIGN.md §4); without this
+        # GSPMD replicates the (E, C, D) dispatch across the model axis.
+        xe = rules.constrain(xe, "model", None, None)
+
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt),
+                   preferred_element_type=dt)
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt),
+                   preferred_element_type=dt)
+    h = jnp.einsum("ecf,efd->ecd", layers.silu(g) * u,
+                   p["w_down"].astype(dt), preferred_element_type=dt)
+    if rules.opt_sharding_enabled() and e % 16 == 0:
+        h = rules.constrain(h, "model", None, None)
+
+    # ---- combine (scatter-add back, weighted)
+    out = jnp.zeros((t, d), dt).at[token_of_slot.reshape(-1)].add(
+        (h * w_of_slot[..., None].astype(dt)).reshape(e * capacity, d),
+        mode="drop",
+    )
+
+    if m.n_shared > 0:
+        out = out + layers.apply_mlp(p["shared"], xn)
+
+    # ---- aux losses / metrics (Switch LB + z-loss)
+    me = probs.mean(0)  # (E,) mean router prob
+    ce = jnp.zeros(e, jnp.float32).at[flat_e].add(1.0) / (t * k)  # load frac
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = jnp.maximum(counts - capacity, 0).sum() / jnp.maximum(t * k, 1)
+    aux = {
+        "moe_lb_loss": lb_loss,
+        "moe_z_loss": z_loss,
+        "moe_dropped_frac": dropped.astype(jnp.float32),
+    }
+    return x + out.reshape(b, s, d), aux

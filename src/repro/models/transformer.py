@@ -1,0 +1,401 @@
+"""Decoder-LM assembly: layer groups, scan-over-periods, train / prefill /
+decode paths, embeddings and the LM head.
+
+Layer plan (configs/base.py ``layer_plan``): the model is a list of groups;
+each group repeats a *period* (tuple of sublayers) ``n_repeat`` times with
+parameters stacked on a leading axis and the forward pass ``lax.scan``-ing
+over it — one period's HLO regardless of depth (fast compiles for the
+80-layer configs, small code for GSPMD to partition).  Heterogeneous stacks
+(jamba's attn:mamba 1:7 with alternating MoE, xlstm's mLSTM/sLSTM pairs)
+are expressed as longer periods, not unrolled layers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba, moe, xlstm
+
+Params = Any
+Cache = Any
+
+
+def _slot(i: int, kind: str) -> str:
+    return f"{i:02d}_{kind}"
+
+
+# ---------------------------------------------------------------------------
+# sublayer dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_sublayer(kind: str, key, cfg):
+    if kind in ("attn", "attn_swa", "attn_bidir"):
+        return attention.init_attn(key, cfg)
+    if kind == "cross":
+        return attention.init_attn(key, cfg, cross=True)
+    if kind == "mlp":
+        p = layers.init_mlp(key, cfg.d_model, cfg.d_ff)
+        p["norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        return p
+    if kind == "moe":
+        return moe.init_moe(key, cfg)
+    if kind == "mamba":
+        return mamba.init_mamba(key, cfg)
+    if kind == "mlstm":
+        return xlstm.init_mlstm(key, cfg)
+    if kind == "slstm":
+        return xlstm.init_slstm(key, cfg)
+    raise ValueError(kind)
+
+
+def init_sublayer_cache(kind: str, cfg, batch: int, max_seq: int):
+    if kind in ("attn", "attn_swa"):
+        cap = min(max_seq, cfg.window) if kind == "attn_swa" and cfg.window else max_seq
+        return attention.init_cache(cfg, batch, cap)
+    if kind == "cross":
+        return attention.init_cache(cfg, batch, cfg.n_frontend_tokens or 1)
+    if kind == "mamba":
+        return mamba.init_mamba_cache(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch)
+    return None  # mlp / moe are stateless
+
+
+def apply_sublayer_seq(kind: str, p, cfg, x, positions, *, want_cache: bool):
+    """Full-sequence path (train / prefill). Returns (x, cache|None, aux)."""
+    aux = {}
+    cache = None
+    if kind in ("attn", "attn_swa", "attn_bidir"):
+        window = cfg.window if kind == "attn_swa" else 0
+        causal = kind != "attn_bidir"
+        if want_cache:
+            x, (k, v) = attention.attend_full(
+                p, cfg, x, positions, causal=causal, window=window, return_kv=True
+            )
+            if window:
+                k, v = k[:, -window:], v[:, -window:]
+            cache = {"k": k, "v": v}
+        else:
+            x = attention.attend_full(
+                p, cfg, x, positions, causal=causal, window=window
+            )
+    elif kind == "mlp":
+        xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+        x = x + layers.apply_mlp(p, xn)
+    elif kind == "moe":
+        x, aux = moe.apply_moe(p, cfg, x)
+    elif kind == "mamba":
+        # (prefill builds recurrent caches via _prefill_recurrent instead)
+        x, _ = mamba.apply_mamba(p, cfg, x)
+    elif kind in ("mlstm", "slstm"):
+        fn = xlstm.apply_mlstm if kind == "mlstm" else xlstm.apply_slstm
+        x, _ = fn(p, cfg, x)
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def apply_sublayer_step(kind: str, p, cfg, x, cache, pos, cross_kv=None):
+    """Single-token decode path. Returns (x, new_cache)."""
+    if kind in ("attn", "attn_swa"):
+        window = cfg.window if kind == "attn_swa" else 0
+        if window and cache["k"].shape[1] <= window:
+            # rolling window cache: write at pos % window
+            wpos = jax.lax.rem(pos, jnp.int32(cache["k"].shape[1]))
+            return _decode_rolling(p, cfg, x, cache, pos, wpos)
+        return attention.attend_decode(p, cfg, x, cache, pos, window=window)
+    if kind == "cross":
+        return attention.attend_cross(p, cfg, x, cache), cache
+    if kind == "mlp":
+        xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+        return x + layers.apply_mlp(p, xn), cache
+    if kind == "moe":
+        x, _ = moe.apply_moe(p, cfg, x, capacity_factor=4.0)
+        return x, cache
+    if kind == "mamba":
+        return mamba.apply_mamba(p, cfg, x, cache=cache, pos=pos)
+    if kind == "mlstm":
+        return xlstm.apply_mlstm(p, cfg, x, cache=cache, pos=pos)
+    if kind == "slstm":
+        return xlstm.apply_slstm(p, cfg, x, cache=cache, pos=pos)
+    raise ValueError(kind)
+
+
+def _decode_rolling(p, cfg, x, cache, pos, wpos):
+    """SWA decode with a size-W rolling cache (mixtral long_500k)."""
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = attention._project_qkv(p, cfg, xn, xn)
+    if cfg.rope_theta > 0:
+        posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        cos, sin = layers.rope_cos_sin(posv, cfg.d_head, cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k_new = layers.apply_rope(k_new, cos, sin)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, wpos, 0, 0)
+    )
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, wpos, 0, 0)
+    )
+    w = cache["k"].shape[1]
+    # slots 0..min(pos, w-1) have been written; once full, all are valid.
+    # RoPE is applied at write time with absolute positions, so attention
+    # over the (order-rotated) ring is position-correct.
+    written = jnp.arange(w)[None, :] <= jnp.minimum(pos, w - 1)
+    mask = written | (pos >= w)
+    out = attention._sdpa(
+        q, k.astype(q.dtype), v.astype(q.dtype), mask[:, None, :],
+        cfg.n_heads // cfg.n_kv,
+    )
+    flat = out.reshape(*out.shape[:2], -1)
+    y = jnp.einsum("bse,ed->bsd", flat, p["wo"].astype(x.dtype))
+    return x + y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key) -> Params:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params: dict = {
+        "embed": layers.he_init(keys[0], (v, d), scale=1.0),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.he_init(keys[1], (d, v))
+    if cfg.frontend == "vit":
+        params["frontend"] = {
+            "proj1": layers.he_init(keys[2], (cfg.d_frontend, d)),
+            "proj2": layers.he_init(keys[3], (d, d)),
+        }
+    groups = []
+    gkey = keys[4]
+    for n_repeat, period in cfg.layer_plan():
+        gkey, sub = jax.random.split(gkey)
+
+        def one(k):
+            ks = jax.random.split(k, len(period))
+            return {
+                _slot(i, kind): init_sublayer(kind, ks[i], cfg)
+                for i, kind in enumerate(period)
+            }
+
+        groups.append(jax.vmap(one)(jax.random.split(sub, n_repeat)))
+    params["groups"] = groups
+    return params
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> Cache:
+    groups = []
+    for n_repeat, period in cfg.layer_plan():
+        ch = {}
+        for i, kind in enumerate(period):
+            c = init_sublayer_cache(kind, cfg, batch, max_seq)
+            if c is not None:
+                ch[_slot(i, kind)] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (n_repeat,) + a.shape
+                    ),
+                    c,
+                )
+        groups.append(ch)
+    return {"groups": groups, "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# forward paths
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg, params, tokens, frontend_embeds=None):
+    x = params["embed"].astype(layers.COMPUTE_DTYPE)[tokens]
+    if cfg.frontend == "vit" and frontend_embeds is not None:
+        f = frontend_embeds.astype(layers.COMPUTE_DTYPE)
+        f = jnp.einsum(
+            "bnd,de->bne", f, params["frontend"]["proj1"].astype(f.dtype)
+        )
+        f = jax.nn.gelu(f)
+        f = jnp.einsum(
+            "bne,ef->bnf", f, params["frontend"]["proj2"].astype(f.dtype)
+        )
+        x = jnp.concatenate([f, x], axis=1)
+    return x
+
+
+def forward(cfg, params, tokens, frontend_embeds=None, *, remat: bool = True):
+    """Full-sequence logits (training path)."""
+    x = embed_inputs(cfg, params, tokens, frontend_embeds)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    aux_total = {"moe_lb_loss": 0.0, "moe_z_loss": 0.0, "moe_dropped_frac": 0.0}
+
+    for (n_repeat, period), gparams in zip(cfg.layer_plan(), params["groups"]):
+
+        def body(carry, p_slice):
+            x = carry
+            auxs = []
+            for i, kind in enumerate(period):
+                x, _, aux = apply_sublayer_seq(
+                    kind, p_slice[_slot(i, kind)], cfg, x, positions,
+                    want_cache=False,
+                )
+                if aux:
+                    auxs.append(aux)
+            if auxs:
+                summed = {
+                    k: sum(a[k] for a in auxs) for k in auxs[0]
+                }
+            else:
+                summed = {}
+            return x, summed
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, aux_stack = jax.lax.scan(body, x, gparams)
+        for k in aux_stack or {}:
+            aux_total[k] = aux_total[k] + aux_stack[k].sum()
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    return logits, aux_total
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = True):
+    """Next-token cross-entropy (+ MoE aux). batch: tokens (B, S) int32
+    [+ frontend_embeds].  Frontend positions are excluded from the loss."""
+    tokens = batch["tokens"]
+    fe = batch.get("frontend_embeds")
+    logits, aux = forward(cfg, params, tokens, fe, remat=remat)
+    n_front = logits.shape[1] - tokens.shape[1]
+    logits_text = logits[:, n_front:, :]
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits_text[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    total = (
+        loss
+        + 0.01 * aux.get("moe_lb_loss", 0.0)
+        + 0.001 * aux.get("moe_z_loss", 0.0)
+    )
+    metrics = {"loss": loss, **{k: v for k, v in aux.items()}}
+    return total, metrics
+
+
+def prefill(cfg, params, tokens, frontend_embeds=None, max_seq: int | None = None):
+    """Run the full prompt, return (last_logits, cache ready for decode).
+
+    Attention caches hold exactly the prompt K/V (padded to ``max_seq`` if
+    given); recurrent sublayers (mamba/mlstm/slstm) re-run their recurrence
+    in chunked/sequential form to produce the final state.
+    """
+    x = embed_inputs(cfg, params, tokens, frontend_embeds)
+    s = x.shape[1]
+    b = x.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    cache_groups = []
+
+    for (n_repeat, period), gparams in zip(cfg.layer_plan(), params["groups"]):
+
+        def body(carry, p_slice):
+            x = carry
+            caches = {}
+            for i, kind in enumerate(period):
+                slot = _slot(i, kind)
+                if kind in ("attn", "attn_swa"):
+                    x, c, _ = apply_sublayer_seq(
+                        kind, p_slice[slot], cfg, x, positions, want_cache=True
+                    )
+                    if max_seq is not None and c["k"].shape[1] < max_seq and not (
+                        kind == "attn_swa" and cfg.window
+                    ):
+                        pad = max_seq - c["k"].shape[1]
+                        c = {
+                            k2: jnp.pad(v2, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                            for k2, v2 in c.items()
+                        }
+                    caches[slot] = c
+                elif kind in ("mamba", "mlstm", "slstm"):
+                    x, c = _prefill_recurrent(kind, p_slice[slot], cfg, x)
+                    caches[slot] = c
+                else:
+                    x, _, _ = apply_sublayer_seq(
+                        kind, p_slice[slot], cfg, x, positions, want_cache=False
+                    )
+            return x, caches
+
+        x, caches = jax.lax.scan(body, x, gparams)
+        cache_groups.append(caches)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    last = jnp.einsum("bd,dv->bv", x[:, -1], head, preferred_element_type=jnp.float32)
+    return last, {"groups": cache_groups, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def _prefill_recurrent(kind, p, cfg, x):
+    """Sequence forward + final recurrent state for SSM-ish sublayers."""
+    if kind == "mamba":
+        return mamba.apply_mamba(p, cfg, x, return_state=True)
+    # mlstm / slstm: step the recurrence over time (state is O(1))
+    fn = xlstm.apply_mlstm if kind == "mlstm" else xlstm.apply_slstm
+    init = (
+        xlstm.init_mlstm_cache(cfg, x.shape[0])
+        if kind == "mlstm"
+        else xlstm.init_slstm_cache(cfg, x.shape[0])
+    )
+
+    def step(carry, xt):
+        cache = carry
+        y, c2 = fn(p, cfg, xt[:, None, :], cache=cache)
+        return c2, y[:, 0]
+
+    cache, ys = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    """One greedy decode step. tokens (B, 1) -> (next (B, 1), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"].astype(layers.COMPUTE_DTYPE)[tokens]
+    new_groups = []
+
+    for (n_repeat, period), gparams, gcache in zip(
+        cfg.layer_plan(), params["groups"], cache["groups"]
+    ):
+
+        def body(carry, inputs):
+            x = carry
+            p_slice, c_slice = inputs
+            new_c = dict(c_slice)
+            for i, kind in enumerate(period):
+                slot = _slot(i, kind)
+                x, nc = apply_sublayer_step(
+                    kind, p_slice[slot], cfg, x, c_slice.get(slot), pos
+                )
+                if slot in new_c and nc is not None:
+                    new_c[slot] = nc
+            return x, new_c
+
+        x, new_gcache = jax.lax.scan(body, x, (gparams, gcache))
+        new_groups.append(new_gcache)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, {"groups": new_groups, "pos": pos + 1}

@@ -1,0 +1,250 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallel train
+form + O(1) recurrent decode) and sLSTM (scalar memory, sequential).
+
+mLSTM trains with the stabilized parallel form (decay matrix from
+exponential input/forget gates, like gated linear attention); decode uses
+the mathematically-equivalent recurrent update with (C, n, m) state.
+sLSTM has no parallel form (its recurrence is non-associative through the
+normalizer), so training runs a ``lax.scan`` over time — faithful to the
+paper, and the reason the arch is assigned the ``long_500k`` shape only in
+decode.  Simplifications vs the reference implementation (noted in
+DESIGN.md): no sLSTM causal-conv frontend, GroupNorm replaced by per-head
+RMSNorm.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _heads(cfg):
+    return cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def m_inner(cfg) -> int:
+    return 2 * cfg.d_model  # expand factor 2
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    di = m_inner(cfg)
+    h = _heads(cfg)
+    keys = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "up": layers.he_init(keys[0], (d, 2 * di)),
+        "conv_w": layers.he_init(keys[1], (4, di), scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": layers.he_init(keys[2], (di, di)),
+        "wk": layers.he_init(keys[3], (di, di)),
+        "wv": layers.he_init(keys[4], (di, di)),
+        "wi": layers.he_init(keys[5], (di, h)),
+        "wf": layers.he_init(keys[6], (di, h)),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),  # open forget gates at init
+        "out_norm": jnp.ones((di,), jnp.float32),
+        "down": layers.he_init(keys[7], (di, d)),
+    }
+
+
+def _mlstm_qkvif(p, cfg, xi, conv_state=None):
+    b, s, di = xi.shape
+    h = _heads(cfg)
+    hd = di // h
+    from repro.models.mamba import _causal_conv
+
+    xc = layers.silu(_causal_conv(xi, p["conv_w"], p["conv_b"], conv_state))
+    q = jnp.einsum("bsd,de->bse", xc, p["wq"].astype(xi.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xc, p["wk"].astype(xi.dtype)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xi, p["wv"].astype(xi.dtype)).reshape(b, s, h, hd)
+    i_log = (
+        jnp.einsum("bsd,dh->bsh", xc, p["wi"].astype(xi.dtype)).astype(jnp.float32)
+        + p["bi"]
+    )
+    f_log = (
+        jnp.einsum("bsd,dh->bsh", xc, p["wf"].astype(xi.dtype)).astype(jnp.float32)
+        + p["bf"]
+    )
+    return q, k, v, i_log, f_log, xc
+
+
+def apply_mlstm(p, cfg, x, cache=None, pos=None):
+    """Train/prefill (cache=None) or one-step decode with (C, n, m) state."""
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    di = m_inner(cfg)
+    h = _heads(cfg)
+    hd = di // h
+    up = jnp.einsum("bsd,de->bse", xn, p["up"].astype(xn.dtype))
+    xi, z = up[..., :di], up[..., di:]
+
+    conv_state = cache.get("conv") if cache is not None else None
+    q, k, v, i_log, f_log, _ = _mlstm_qkvif(p, cfg, xi, conv_state)
+    scale = 1.0 / (hd**0.5)
+
+    if cache is None:
+        b, s = x.shape[0], x.shape[1]
+        lf = jax.nn.log_sigmoid(f_log)  # (B,S,H)
+        cum = jnp.cumsum(lf, axis=1)
+        ii = jnp.arange(s)
+        causal = ii[:, None] >= ii[None, :]
+
+        # per-head lax.map: the (B,S,S) decay matrix is materialized for ONE
+        # head at a time (H-fold smaller peak memory; (B,S,S,H) at 4k/bf
+        # sizes would dominate the training footprint)
+        def one_head(args):
+            qh, kh, vh, cumh, ih = args  # (B,S,hd)x3, (B,S), (B,S)
+            dmat = cumh[:, :, None] - cumh[:, None, :] + ih[:, None, :]
+            dmat = jnp.where(causal[None], dmat, -jnp.inf)
+            m = jnp.max(dmat, axis=2)  # (B,S)
+            wdecay = jnp.exp(dmat - m[:, :, None])  # (B,S,S)
+            qk = (
+                jnp.einsum(
+                    "bid,bjd->bij", qh, kh, preferred_element_type=jnp.float32
+                )
+                * scale
+            )
+            num = jnp.einsum("bij,bjd->bid", wdecay * qk, vh.astype(jnp.float32))
+            den = jnp.abs((wdecay * qk).sum(-1))
+            den = jnp.maximum(den, jnp.exp(-m))
+            return (num / den[..., None]).astype(x.dtype)
+
+        heads = jax.lax.map(
+            one_head,
+            (
+                q.transpose(2, 0, 1, 3),
+                k.transpose(2, 0, 1, 3),
+                v.transpose(2, 0, 1, 3),
+                cum.transpose(2, 0, 1),
+                i_log.transpose(2, 0, 1),
+            ),
+        )  # (H,B,S,hd)
+        hcore = heads.transpose(1, 2, 0, 3)
+        new_cache = None
+    else:
+        # recurrent: m' = max(lf + m, i); C' = e^{lf+m-m'} C + e^{i-m'} k v^T
+        lf = jax.nn.log_sigmoid(f_log[:, 0])  # (B,H)
+        il = i_log[:, 0]
+        m_prev, c_prev, n_prev = cache["m"], cache["C"], cache["n"]
+        m_new = jnp.maximum(lf + m_prev, il)
+        fdec = jnp.exp(lf + m_prev - m_new)[..., None, None]
+        iexp = jnp.exp(il - m_new)[..., None, None]
+        k1, v1, q1 = (
+            k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32),
+            q[:, 0].astype(jnp.float32),
+        )
+        c_new = fdec * c_prev + iexp * jnp.einsum("bhd,bhe->bhde", k1, v1)
+        n_new = fdec[..., 0] * n_prev + iexp[..., 0] * k1
+        num = jnp.einsum("bhde,bhd->bhe", c_new, q1) * scale
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q1)) * scale,
+            jnp.exp(-m_new),
+        )
+        hcore = (num / den[..., None]).astype(x.dtype)[:, None]
+        conv_new = jnp.concatenate([cache["conv"], xi], axis=1)[:, 1:]
+        new_cache = {"C": c_new, "n": n_new, "m": m_new, "conv": conv_new}
+
+    hflat = hcore.reshape(*x.shape[:2], di)
+    hflat = layers.rms_norm(hflat, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum(
+        "bsd,de->bse", hflat * layers.silu(z), p["down"].astype(x.dtype)
+    )
+    return x + out, new_cache
+
+
+def init_mlstm_cache(cfg, batch: int):
+    di = m_inner(cfg)
+    h = _heads(cfg)
+    hd = di // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e9, jnp.float32),
+        # causal-conv window (the decode path must see the same taps the
+        # parallel form convolves over)
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = _heads(cfg)
+    hd = d // h
+    keys = jax.random.split(key, 9)
+    p = {"norm": jnp.ones((d,), jnp.float32)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = layers.he_init(keys[i], (d, d))
+        p[f"r{g}"] = layers.he_init(keys[4 + i], (h, hd, hd), scale=0.5)
+        p[f"b{g}"] = (
+            jnp.full((d,), 1.0, jnp.float32) if g == "f" else jnp.zeros((d,), jnp.float32)
+        )
+    p["down"] = layers.he_init(keys[8], (d, d))
+    return p
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """One sLSTM step. xt (B, D); state dict of (B,H,hd)."""
+    h_, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    b = xt.shape[0]
+    nh = _heads(cfg)
+    hd = cfg.d_model // nh
+
+    def gate(g):
+        wx = jnp.einsum("bd,de->be", xt, p[f"w{g}"].astype(xt.dtype)).reshape(
+            b, nh, hd
+        ).astype(jnp.float32)
+        rh = jnp.einsum("bhd,hde->bhe", h_, p[f"r{g}"])
+        return wx + rh + p[f"b{g}"].reshape(nh, hd)[None]
+
+    i_t, f_t, z_t, o_t = gate("i"), gate("f"), gate("z"), gate("o")
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_e = jnp.exp(i_t - m_new)
+    f_e = jnp.exp(f_t + m - m_new)
+    c_new = f_e * c + i_e * jnp.tanh(z_t)
+    n_new = f_e * n + i_e
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def apply_slstm(p, cfg, x, cache=None, pos=None):
+    xn = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+    b = x.shape[0]
+    state = cache if cache is not None else init_slstm_cache(cfg, b)
+
+    if x.shape[1] == 1 and cache is not None:
+        state = _slstm_cell(p, cfg, xn[:, 0], state)
+        hs = state["h"].reshape(b, 1, cfg.d_model).astype(x.dtype)
+        new_cache = state
+    else:
+
+        def step(st, xt):
+            st = _slstm_cell(p, cfg, xt, st)
+            return st, st["h"]
+
+        state, hseq = jax.lax.scan(step, state, xn.transpose(1, 0, 2))
+        hs = hseq.transpose(1, 0, 2, 3).reshape(b, x.shape[1], cfg.d_model)
+        hs = hs.astype(x.dtype)
+        new_cache = state if cache is not None else None
+
+    out = jnp.einsum("bsd,de->bse", hs, p["down"].astype(x.dtype))
+    return x + out, new_cache
+
+
+def init_slstm_cache(cfg, batch: int):
+    nh = _heads(cfg)
+    hd = cfg.d_model // nh
+    z = lambda: jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, nh, hd), -1e9)}

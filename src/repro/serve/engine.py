@@ -1,0 +1,40 @@
+"""Batched serving engine: jit'd prefill + decode loop with greedy
+sampling. The same serve_step the dry-run lowers at pod scale."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServeEngine:
+    def __init__(self, model, params=None, seed: int = 0):
+        self.model = model
+        self.params = (
+            params
+            if params is not None
+            else model.init_params(jax.random.key(seed))
+        )
+        self._prefill = jax.jit(model.prefill, static_argnames=("max_seq",))
+        self._step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def generate(
+        self, prompts: np.ndarray, max_new_tokens: int = 16, **extras
+    ) -> np.ndarray:
+        batch = {"tokens": jnp.asarray(prompts), **{
+            k: jnp.asarray(v) for k, v in extras.items()
+        }}
+        # attention caches need headroom for the tokens we will generate
+        max_seq = prompts.shape[1] + max_new_tokens + (
+            self.model.cfg.n_frontend_tokens
+            if self.model.cfg.frontend == "vit"
+            else 0
+        )
+        last, cache = self._prefill(self.params, batch, max_seq=max_seq)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        out = [np.asarray(tok)]
+        for _ in range(max_new_tokens - 1):
+            tok, cache = self._step(self.params, cache, tok)
+            out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1)

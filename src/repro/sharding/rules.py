@@ -1,0 +1,264 @@
+"""Named-axis sharding rules (GSPMD): parameters are FSDP-sharded (wide
+axis over "model" for TP, d_model axis over "data" for ZeRO-3-style weight
+sharding); activations shard batch over every non-"model" axis.
+
+Rules are resolved by parameter *leaf name* (the stack is ours, so the
+table is closed); dims that don't divide the mesh axis fall back to
+replication — logged, never fatal (elastic meshes).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def opt_sharding_enabled() -> bool:
+    """Beyond-baseline activation-sharding optimizations (EXPERIMENTS §Perf):
+    explicit head/seq sharding constraints + gather-friendly embed layout."""
+    return os.environ.get("REPRO_OPT_SHARDING", "0") == "1"
+
+
+_ACTIVE_MESH: list[Mesh] = []
+
+
+def set_active_mesh(mesh: Mesh | None):
+    """Explicit mesh registry for activation constraints (the plain
+    ``with mesh:`` context is not visible to with_sharding_constraint in
+    this JAX version).  Launchers call this next to entering the mesh."""
+    _ACTIVE_MESH.clear()
+    if mesh is not None:
+        _ACTIVE_MESH.append(mesh)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades to a no-op when no active
+    mesh is registered or an axis does not divide (elastic meshes, CPU
+    tests). ``spec`` entries may be axis names, None, or ("a","b").
+    "B" expands to all non-model (batch) axes."""
+    if not _ACTIVE_MESH:
+        return x
+    mesh = _ACTIVE_MESH[0]
+    try:
+        names = set(mesh.axis_names)
+        fixed = []
+        for dim, s in zip(x.shape, spec):
+            if s == "B":
+                s = batch_axes(mesh)
+            ax = s if isinstance(s, (tuple, list)) or s is None else (s,)
+            if ax is None:
+                fixed.append(None)
+                continue
+            ax = tuple(a for a in ax if a in names)
+            total = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+            fixed.append(
+                (ax if len(ax) > 1 else ax[0])
+                if ax and dim % total == 0
+                else None
+            )
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed))
+        )
+    except Exception:
+        return x
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# leaf name -> spec template over the *trailing* dims (leading stack dims
+# are padded with None).  "D" = shard over data axes, "M" = over model.
+_RULES: dict[str, tuple] = {
+    "embed": ("M", "D"),
+    "lm_head": ("D", "M"),
+    "wq": ("D", "M"),
+    "wk": ("D", "M"),
+    "wv": ("D", "M"),
+    "wo": ("M", "D"),
+    "w_gate": ("D", "M"),
+    "w_up": ("D", "M"),
+    "w_down": ("M", "D"),
+    "router": ("D", None),
+    "in_proj": ("D", "M"),
+    "out_proj": ("M", "D"),
+    "x_proj": ("M", None),
+    "dt_proj": (None, "M"),
+    "A_log": ("M", None),
+    "conv_w": (None, "M"),
+    "up": ("D", "M"),
+    "down": ("M", "D"),
+    "proj1": ("D", "M"),
+    "proj2": ("M", "D"),
+    # per-gate xlstm projections
+    "wi": ("D", "M"),
+    "wf": ("D", "M"),
+    "wz": ("D", "M"),
+    "wo_g": ("D", "M"),
+}
+# 3D expert tensors: (E, in, out)
+_RULES_3D = {
+    "w_gate": (None, "D", "M"),
+    "w_up": (None, "D", "M"),
+    "w_down": (None, "M", "D"),
+}
+
+
+def _axis_ok(mesh: Mesh, names, dim: int) -> bool:
+    if not names or any(a not in mesh.shape for a in names):
+        return False  # elastic meshes may lack an axis entirely
+    total = int(np.prod([mesh.shape[a] for a in names]))
+    return dim % total == 0
+
+
+def _resolve(mesh: Mesh, template, shape) -> P:
+    d_ax = batch_axes(mesh)
+    out: list = [None] * (len(shape) - len(template))
+    for t, dim in zip(template, shape[len(out):]):
+        if t == "D" and _axis_ok(mesh, d_ax, dim):
+            out.append(d_ax if len(d_ax) > 1 else d_ax[0])
+        elif t == "M" and _axis_ok(mesh, ("model",), dim):
+            out.append("model")
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(mesh: Mesh, params_spec: Any) -> Any:
+    """Same-structure tree of PartitionSpecs for a params ShapeDtype tree."""
+
+    def visit(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        shape = leaf.shape
+        if name == "embed" and opt_sharding_enabled():
+            # gather-friendly layout: vocab replicated, d_model over data —
+            # token lookups become communication-free local row gathers
+            # (fixes the GSPMD "involuntary full rematerialization" on the
+            # vocab-sharded gather; EXPERIMENTS §Perf)
+            return _resolve(mesh, (None, "D"), shape)
+        if name in ("wi", "wf") and len(shape) >= 2 and shape[-1] <= 128:
+            return P(*([None] * len(shape)))  # tiny gate heads: replicate
+        if name in ("w_gate", "w_up", "w_down") and len(shape) >= 3:
+            n_model = mesh.shape.get("model", 1)
+            # EP applies to EXPERT stacks only — 4D (L, E, D, F).  A 3D
+            # (L, D, F) dense stack whose L happens to divide the model
+            # axis must NOT be layer-sharded (§Perf: cost qwen2-72b 2x).
+            if (
+                opt_sharding_enabled()
+                and len(shape) >= 4
+                and shape[-3] % n_model == 0
+            ):
+                # expert parallelism: experts over "model", d_model over
+                # data (FSDP); pairs with the EP dispatch constraint in
+                # models/moe.py (§Perf iteration 5)
+                tpl = ("M", "D", None) if name != "w_down" else ("M", None, "D")
+                return _resolve(mesh, tpl, shape)
+            return _resolve(mesh, _RULES_3D[name], shape)
+        if name in _RULES and len(shape) >= 2:
+            return _resolve(mesh, _RULES[name], shape)
+        if len(shape) >= 2 and shape[-1] >= 1024:
+            # fallback for unnamed wide matrices
+            return _resolve(mesh, ("D", "M"), shape)
+        return P(*([None] * len(shape)))  # norms, biases, scalars
+
+    return jax.tree_util.tree_map_with_path(visit, params_spec)
+
+
+def param_shardings(mesh: Mesh, params_spec: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(mesh, params_spec)
+    )
+
+
+def data_spec(mesh: Mesh, batch_spec: Any) -> Any:
+    """Batch inputs: shard dim 0 over all non-model axes."""
+    d_ax = batch_axes(mesh)
+    ax = d_ax if len(d_ax) > 1 else d_ax[0]
+
+    def visit(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % int(
+            np.prod([mesh.shape[a] for a in batch_axes(mesh)])
+        ):
+            return P(*([None] * leaf.ndim))
+        return P(ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(visit, batch_spec)
+
+
+def cache_spec(mesh: Mesh, cache_spec_tree: Any, *, seq_sharded: bool) -> Any:
+    """KV/state caches: batch-shard dim with batch>=n_data, else (long
+    context, batch 1) shard the sequence axis of attention caches."""
+    d_ax = batch_axes(mesh)
+    ax = d_ax if len(d_ax) > 1 else d_ax[0]
+    n_data = int(np.prod([mesh.shape[a] for a in d_ax]))
+
+    n_model = mesh.shape.get("model", 1)
+    opt = opt_sharding_enabled()
+
+    def visit(path, leaf):
+        shape = leaf.shape
+        if leaf.ndim == 0:
+            return P()
+        # stacked caches: (n_repeat, B, S, kv, hd) attn / (n_repeat, B, ...)
+        if leaf.ndim >= 3:
+            b_dim = 1
+            if shape[b_dim] % n_data == 0 and not seq_sharded:
+                spec = [None] * leaf.ndim
+                spec[b_dim] = ax
+                if (
+                    opt
+                    and leaf.ndim == 5
+                    and shape[2] % n_model == 0
+                    and shape[2] > n_model
+                ):
+                    # decode: shard the KV seq axis over "model" too — the
+                    # per-token attention then reads 1/n_model of the cache
+                    # per chip (16x less HBM + compute; softmax combines
+                    # via collectives)
+                    spec[2] = "model"
+                return P(*spec)
+            if seq_sharded and leaf.ndim >= 4 and shape[2] % n_data == 0:
+                spec = [None] * leaf.ndim
+                spec[2] = ax  # sequence axis of (L, B, S, kv, hd)
+                if opt and shape[2] % (n_data * n_model) == 0:
+                    spec[2] = (*d_ax, "model") if len(d_ax) > 1 else (
+                        d_ax[0], "model"
+                    )
+                return P(*spec)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_spec_tree)
+
+
+def decode_seq_axes(batch: int, seq: int) -> tuple[str, ...]:
+    """Which mesh axes the decode KV-cache seq dim is sharded over (must
+    mirror cache_spec's opt-mode decisions)."""
+    if not (_ACTIVE_MESH and opt_sharding_enabled()):
+        return ()
+    mesh = _ACTIVE_MESH[0]
+    d_ax = batch_axes(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in d_ax]))
+    n_model = mesh.shape.get("model", 1)
+    if batch % n_data == 0:
+        return ("model",) if (seq % n_model == 0 and seq > n_model) else ()
+    if seq % (n_data * n_model) == 0:
+        return (*d_ax, "model")
+    return ()
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

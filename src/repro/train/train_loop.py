@@ -1,0 +1,114 @@
+"""train_step builder: remat is per-layer (inside the model's scan),
+microbatch grad-accumulation via lax.scan, bf16 gradient reduction, AdamW.
+
+The returned step is a pure jit-able ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` used identically by the real trainer
+(launch/train.py) and the multi-pod dry-run (launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+
+def build_train_step(
+    model,
+    opt_cfg: opt_lib.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    param_shardings=None,
+) -> Callable:
+    """``param_shardings`` (optional, a tree of NamedSharding matching the
+    params) pins the gradient accumulator to the FSDP layout — without it
+    GSPMD may replicate the accumulator, turning every weight-grad
+    reduction into a full all-reduce and carrying an unsharded copy of the
+    model through the microbatch scan (§Perf iteration 3: 35% of wire
+    bytes on qwen2-72b train)."""
+    loss_fn = model.loss_fn
+
+    def cast_params(params):
+        # one bf16 copy per step OUTSIDE the microbatch loop: FSDP
+        # all-gathers then move half the bytes (cast-before-gather)
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.dtype == jnp.float32 and p.ndim >= 2
+            else p,
+            params,
+        )
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        # bf16 gradient compression for the cross-replica reduction; the
+        # optimizer immediately re-ups to f32 master precision.
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            params_c = cast_params(params)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                loss, _, grads = grads_of(params_c, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                if param_shardings is not None:
+                    g_acc = jax.tree.map(
+                        jax.lax.with_sharding_constraint, g_acc,
+                        param_shardings,
+                    )
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if param_shardings is not None:
+                g0 = jax.tree.map(
+                    jax.lax.with_sharding_constraint, g0, param_shardings
+                )
+            (g_sum, l_sum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(
+                lambda g: (g / microbatches).astype(jnp.bfloat16), g_sum
+            )
+            loss = l_sum / microbatches
+            metrics = {}
+
+        params, opt_state, om = opt_lib.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = {**metrics, **om, "loss_total": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_serve_step(model) -> Callable:
+    """(params, cache, tokens) -> (next_tokens, cache) — one decode step."""
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def build_prefill(model) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill

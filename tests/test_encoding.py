@@ -1,0 +1,95 @@
+"""Unit tests: ASCII key encoding (paper §4) and order-equivalence."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding
+
+
+def test_encode_matches_np():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(32, 127, size=(257, 10), dtype=np.uint8)
+    hi, lo = encoding.encode(jnp.asarray(keys))
+    hi_np, lo_np = encoding.encode_np(keys)
+    np.testing.assert_array_equal(np.asarray(hi), hi_np)
+    np.testing.assert_array_equal(np.asarray(lo), lo_np)
+
+
+def test_short_keys_zero_padded():
+    keys = np.array([[65, 66, 67]], dtype=np.uint8)  # "ABC"
+    hi, lo = encoding.encode_np(keys)
+    assert hi[0] == (65 << 24) | (66 << 16) | (67 << 8)
+    assert lo[0] == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.binary(min_size=10, max_size=10).map(
+            lambda b: bytes(32 + (c % 95) for c in b)  # printable ASCII
+        ),
+        min_size=2,
+        max_size=50,
+    )
+)
+def test_order_equivalence_with_base95_oracle(keys):
+    """(hi, lo) order == memcmp order == paper's base-95 u64 order,
+    whenever the first 8 bytes are distinct (ties beyond byte 8 are the
+    touch-up's job in both schemes)."""
+    arr = np.frombuffer(b"".join(keys), dtype=np.uint8).reshape(-1, 10)
+    hi, lo = encoding.encode_np(arr)
+    two_word = [(int(h) << 32) | int(l) for h, l in zip(hi, lo)]
+    b95 = [encoding.encode_base95_u64(k) for k in keys]
+    for i in range(len(keys)):
+        for j in range(len(keys)):
+            if keys[i][:8] != keys[j][:8]:
+                assert (two_word[i] < two_word[j]) == (keys[i][:8] < keys[j][:8])
+            if keys[i][:9] != keys[j][:9]:
+                assert (b95[i] < b95[j]) == (keys[i][:9] < keys[j][:9])
+
+
+def test_feature_monotone_and_bounded():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(32, 127, size=(1000, 10), dtype=np.uint8)
+    hi, lo = encoding.encode_np(keys)
+    order = np.lexsort((lo, hi))
+    x = np.asarray(
+        encoding.feature_f32(
+            jnp.asarray(hi),
+            jnp.asarray(lo),
+            jnp.uint32(hi[order[0]]),
+            jnp.uint32(lo[order[0]]),
+            jnp.float32(1.0 / 2**64),
+        )
+    )
+    assert (x >= 0).all() and (x <= 1).all()
+    assert (np.diff(x[order]) >= 0).all()
+
+
+def test_feature_below_min_maps_to_zero():
+    hi = jnp.asarray(np.array([5, 10], dtype=np.uint32))
+    lo = jnp.asarray(np.array([0, 0], dtype=np.uint32))
+    x = encoding.feature_f32(
+        hi, lo, jnp.uint32(10), jnp.uint32(0), jnp.float32(1e-9)
+    )
+    assert float(x[0]) == 0.0
+
+
+def test_common_prefix_precision():
+    """Keys sharing a long prefix must still get distinct features."""
+    base = np.full((100, 10), 65, dtype=np.uint8)
+    base[:, 7] = np.arange(32, 132)  # differ only in byte 7
+    hi, lo = encoding.encode_np(base)
+    span = (float(lo.max()) - float(lo.min()))
+    x = np.asarray(
+        encoding.feature_f32(
+            jnp.asarray(hi),
+            jnp.asarray(lo),
+            jnp.uint32(hi[0]),
+            jnp.uint32(lo.min()),
+            jnp.float32(1.0 / span),
+        )
+    )
+    assert len(np.unique(x)) == 100

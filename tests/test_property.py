@@ -1,0 +1,73 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding, learned_sort, rmi, validate
+from repro.data import gensort, pipeline
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**64 - 1), min_size=4, max_size=500),
+    st.integers(0, 100),
+)
+def test_sort_device_any_distribution(vals, seed):
+    """LearnedSort output == comparison-sort oracle for arbitrary u64 keys."""
+    v = np.array(vals, dtype=np.uint64)
+    hi = (v >> np.uint64(32)).astype(np.uint32)
+    lo = (v & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    rng = np.random.default_rng(seed)
+    sample = rng.choice(len(v), min(len(v), 64), replace=False)
+    model = rmi.fit_encoded(hi[sample], lo[sample], n_leaf=32)
+    hs, ls, perm = learned_sort.sort_device(
+        model, jnp.asarray(hi), jnp.asarray(lo), use_kernels=False
+    )
+    o = np.lexsort((lo, hi))
+    np.testing.assert_array_equal(np.asarray(hs), hi[o])
+    np.testing.assert_array_equal(np.asarray(ls), lo[o])
+    assert len(np.unique(np.asarray(perm))) == len(v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 10**6), st.integers(2, 64))
+def test_equidepth_bucket_bounds(n, buckets):
+    """Bucket ids from any CDF value land in range."""
+    y = np.linspace(0, 1, 50)
+    b = np.minimum((y * buckets).astype(int), buckets - 1)
+    assert b.min() >= 0 and b.max() == buckets - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31), st.integers(10, 300))
+def test_checksum_invariant_under_permutation(seed, n):
+    recs = gensort.make_records(n, seed=seed % 1000)
+    c1 = validate.checksum(recs)
+    perm = np.random.default_rng(seed).permutation(n)
+    c2 = validate.checksum(recs[perm])
+    assert c1 == c2
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31), st.integers(10, 300))
+def test_checksum_detects_mutation(seed, n):
+    recs = gensort.make_records(n, seed=seed % 1000)
+    c1 = validate.checksum(recs)
+    recs2 = recs.copy()
+    recs2[n // 2, 55] ^= 0x5A
+    assert validate.checksum(recs2) != c1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(1, 10_000), min_size=20, max_size=400),
+    st.integers(2, 16),
+)
+def test_length_bucketing_monotone(lengths, n_buckets):
+    """Longer sequences never land in a smaller bucket (monotone CDF)."""
+    arr = np.array(lengths, dtype=np.int64)
+    b = pipeline.length_buckets(arr, n_buckets)
+    order = np.argsort(arr, kind="stable")
+    assert (np.diff(b[order]) >= 0).all()
