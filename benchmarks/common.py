@@ -1,4 +1,11 @@
-"""Shared benchmark utilities: dataset cache, timing, CSV emission."""
+"""Shared benchmark utilities: dataset cache, timing, CSV emission.
+
+Not a paper figure itself — every figure script imports from here.  The
+record-file cache lives in ``$REPRO_BENCH_CACHE`` (default
+``/tmp/repro_bench``); ``disk_bandwidth_mb_s`` is the read+write storage
+reference line drawn in Fig. 2.  See benchmarks/README.md for the
+script -> figure index.
+"""
 
 from __future__ import annotations
 

@@ -35,8 +35,8 @@ def run(n_records: int = 1_000_000) -> list[dict]:
     return rows
 
 
-def main():
-    for r in run():
+def main(n_records: int = 1_000_000):
+    for r in run(n_records):
         common.emit(
             f"fig7_io_{r['algo']}", 0.0,
             f"io={r['io_bytes']/1e6:.0f}MB ({r['io_over_input']:.2f}x input) "

@@ -40,8 +40,8 @@ def run(n_records: int = 1_000_000) -> list[dict]:
     return rows
 
 
-def main():
-    for r in run():
+def main(n_records: int = 1_000_000):
+    for r in run(n_records):
         common.emit(
             f"fig5_joulesort_{r['algo']}", 0.0,
             f"J={r['joules']:.0f}(simulated@{WATTS:.0f}W) "

@@ -43,8 +43,8 @@ def run(n_records: int = 1_000_000, n_buckets: int = 256) -> list[dict]:
     return rows
 
 
-def main():
-    for r in run():
+def main(n_records: int = 1_000_000):
+    for r in run(n_records):
         common.emit(
             f"s33_partition_variance_{r['dist']}",
             0.0,

@@ -1,30 +1,63 @@
 """Paper Fig. 6: share of runtime per ELSAR phase (training must be <1-few
-%, partitioning the largest block)."""
+%, partitioning the largest block).
+
+With ``--readers > 1`` the pipelined runtime (core/pipeline.py) overlaps
+the phases, which Fig. 6's stacked bars cannot show — so for every reader
+count we also emit the per-phase wall-clock span, the end-to-end wall
+clock, and the overlap (busy minus wall) seconds.
+
+    PYTHONPATH=src:. python benchmarks/phase_breakdown.py [--records N] [--readers 1 4]
+"""
 
 from __future__ import annotations
 
+import argparse
 import tempfile
 
 from benchmarks import common
 from repro.core import external
 
 
-def run(n_records: int = 1_000_000) -> dict:
+def run(n_records: int = 1_000_000, n_readers: int = 1) -> dict:
     path, _ = common.dataset(n_records, skewed=False)
     with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
-        stats = external.sort_file(path, out.name, memory_budget_bytes=64 << 20)
+        stats = external.sort_file(
+            path, out.name, memory_budget_bytes=64 << 20, n_readers=n_readers
+        )
     total = stats.total_seconds
-    return {
-        phase: {"seconds": s, "share_pct": 100 * s / total}
+    report = {
+        phase: {
+            "seconds": s,
+            "share_pct": 100 * s / total,
+            "wall_seconds": stats.phase_wall_seconds.get(phase, s),
+        }
         for phase, s in stats.phase_seconds.items()
     }
+    report["_overall"] = {
+        "busy_seconds": total,
+        "wall_seconds": stats.wall_seconds,
+        "overlap_seconds": stats.overlap_seconds,
+    }
+    return report
 
 
-def main():
-    for phase, r in run().items():
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--records", type=int, default=1_000_000)
+    ap.add_argument("--readers", type=int, nargs="+", default=[1])
+    args = ap.parse_args(argv)
+    for r in args.readers:
+        suffix = "" if r == 1 else f"_r{r}"  # r=1 keeps historical names
+        report = run(args.records, n_readers=r)
+        overall = report.pop("_overall")
+        for phase, row in report.items():
+            common.emit(
+                f"fig6_phase_{phase}{suffix}", row["seconds"] * 1e6,
+                f"share={row['share_pct']:.1f}% wall={row['wall_seconds']:.2f}s",
+            )
         common.emit(
-            f"fig6_phase_{phase}", r["seconds"] * 1e6,
-            f"share={r['share_pct']:.1f}%",
+            f"fig6_overlap{suffix}", overall["overlap_seconds"] * 1e6,
+            f"busy={overall['busy_seconds']:.2f}s wall={overall['wall_seconds']:.2f}s",
         )
 
 

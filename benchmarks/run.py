@@ -23,13 +23,17 @@ def main() -> None:
     )
 
     n = int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000))
+    # explicit argv/args: the harness's own sys.argv must never leak into a
+    # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that
+    # takes a record count (Fig. 4's sizes are structural: budget multiples)
     suites = [
-        ("fig2_sort_rates", lambda: sort_rates.main()),
-        ("s33_fig3_partition_variance", lambda: partition_variance.main()),
-        ("fig4_scalability", lambda: scalability.main()),
-        ("fig5_joulesort", lambda: joulesort.main()),
-        ("fig6_phase_breakdown", lambda: phase_breakdown.main()),
-        ("fig7_io_stats", lambda: io_stats.main()),
+        ("fig2_sort_rates", lambda: sort_rates.main(n)),
+        ("s33_fig3_partition_variance", lambda: partition_variance.main(n)),
+        ("fig4_scalability", lambda: scalability.main([])),
+        ("fig5_joulesort", lambda: joulesort.main(n)),
+        ("fig6_phase_breakdown", lambda: phase_breakdown.main(
+            ["--records", str(n)])),
+        ("fig7_io_stats", lambda: io_stats.main(n)),
     ]
     failures = 0
     for name, fn in suites:

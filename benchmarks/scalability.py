@@ -1,9 +1,18 @@
 """Paper Fig. 4 (scaled down): sorting rate as the input grows to multiples
 of the memory budget — the paper runs 5x..40x of RAM; we run 5x..40x of a
-small fixed budget so the same out-of-core machinery is exercised."""
+small fixed budget so the same out-of-core machinery is exercised.
+
+``--readers`` adds the paper's r axis (§3.2): ELSAR is re-run with an
+r-way reader pool (the External Mergesort baseline stays sequential —
+the paper's Nsort comparison point also parallelizes, so treat the r>1
+rows as ELSAR-only scaling).
+
+    PYTHONPATH=src:. python benchmarks/scalability.py [--readers 1 4]
+"""
 
 from __future__ import annotations
 
+import argparse
 import tempfile
 
 from benchmarks import common
@@ -13,31 +22,45 @@ from repro.data import gensort
 BUDGET = 16 << 20  # 16 MB "memory"
 
 
-def run(multipliers=(5, 10, 20, 40)) -> list[dict]:
+def run(multipliers=(5, 10, 20, 40), n_readers: int = 1) -> list[dict]:
     rows = []
     for mult in multipliers:
         n = mult * BUDGET // gensort.RECORD_BYTES
         path, chk = common.dataset(n, skewed=False)
-        for algo, fn in (("elsar", external.sort_file),
-                         ("extms", mergesort.sort_file)):
+        algos = [
+            ("elsar", lambda p, o: external.sort_file(
+                p, o, memory_budget_bytes=BUDGET, n_readers=n_readers
+            )),
+        ]
+        if n_readers == 1:  # baseline has no reader pool; run it once
+            algos.append(("extms", lambda p, o: mergesort.sort_file(
+                p, o, memory_budget_bytes=BUDGET
+            )))
+        for algo, fn in algos:
             with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
-                stats = fn(path, out.name, memory_budget_bytes=BUDGET)
+                stats = fn(path, out.name)
                 assert validate.validate_file(out.name, chk, n)["ok"]
                 rows.append({
                     "algo": algo,
                     "x_memory": mult,
+                    "readers": n_readers,
                     "rate_mb_s": stats.rate_mb_s(),
                 })
     return rows
 
 
-def main():
-    for r in run():
-        common.emit(
-            f"fig4_scalability_{r['algo']}_{r['x_memory']}x",
-            0.0,
-            f"rate={r['rate_mb_s']:.1f}MB/s",
-        )
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--readers", type=int, nargs="+", default=[1])
+    args = ap.parse_args(argv)
+    for r in args.readers:
+        suffix = "" if r == 1 else f"_r{r}"  # r=1 keeps historical names
+        for row in run(n_readers=r):
+            common.emit(
+                f"fig4_scalability_{row['algo']}_{row['x_memory']}x{suffix}",
+                0.0,
+                f"rate={row['rate_mb_s']:.1f}MB/s",
+            )
 
 
 if __name__ == "__main__":

@@ -31,8 +31,8 @@ def run(n_records: int = 1_000_000, budget=64 << 20) -> list[dict]:
     return rows
 
 
-def main():
-    for r in run():
+def main(n_records: int = 1_000_000):
+    for r in run(n_records):
         common.emit(
             f"fig2_sort_rate_{r['algo']}_{r['dist']}",
             r["seconds"] * 1e6,

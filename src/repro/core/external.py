@@ -1,63 +1,43 @@
 """ELSAR: the out-of-core, file-to-file external sort (paper Alg. 1).
 
-Faithful reproduction of the paper's control flow, with the in-memory
-compute (encode, CDF inference, per-partition sort) running on the JAX
-device and the spill/fragment I/O on the host filesystem:
+This is the stable entry point; the runtime itself lives in
+``repro.core.pipeline`` — a pipelined, parallel implementation of the
+paper's control flow:
 
-  line 1   sparse output file of |I| bytes           -> _create_output
+  line 1   sparse output file of |I| bytes           -> phase "setup"
   line 2   train CDF model on a sample               -> phase "train"
-  lines 6-20  r parallel readers stream batches, predict partition ids,
-              append records to per-partition spill files
-              (this container exposes ONE device; the r-way reader
-              parallelism of the paper maps to the pod-scale sorter in
-              core/distributed.py — here r=1 streams batches)
+  lines 6-20  r parallel readers stream stripe-aligned batches, predict
+              partition ids, and flush coalesced fragments to per-partition
+              spill files (``n_readers`` maps the paper's r; the default 1
+              preserves the historical sequential behavior byte-for-byte)
                                                      -> phase "partition"
-  line 21  s = max partitions resident in memory     -> memory_budget
-  lines 22-31  per-partition: load fragments, LearnedSort, write at the
-              precomputed offset (concatenation)     -> phases "sort"+"write"
+  lines 22-31  per-partition: load fragments ("sort_read"), LearnedSort
+              ("sort"), write at the precomputed offset ("write") — these
+              run as queue-connected stages that overlap with each other
+              and with the tail of partitioning
 
-Instrumentation: every phase is timed and every byte of file I/O counted,
-feeding the paper's Fig. 6 (phase breakdown) and Fig. 7 (I/O load)
-benchmarks.
+Instrumentation: every phase is timed (busy + wall + CPU seconds) and every
+byte of file I/O counted, feeding the paper's Fig. 6 (phase breakdown) and
+Fig. 7 (I/O load) benchmarks; ``SortStats.overlap_seconds`` exposes the
+pipelining effect.  See DESIGN.md §1 for the stage graph.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import os
-import tempfile
 import time
 
-import numpy as np
-import jax.numpy as jnp
+# Re-exported for compatibility: SortStats began life here and the
+# mergesort/terasort baselines (and external callers) import it from
+# this module.
+from repro.core.pipeline import SortPipelineConfig, SortStats, run_pipeline
 
-from repro.core import learned_sort, rmi, validate
-from repro.data import gensort
-
-
-@dataclasses.dataclass
-class SortStats:
-    n_records: int = 0
-    bytes_read: int = 0
-    bytes_written: int = 0
-    phase_seconds: dict = dataclasses.field(default_factory=dict)
-    partition_counts: list = dataclasses.field(default_factory=list)
-    fallbacks: int = 0
-
-    @property
-    def total_seconds(self) -> float:
-        return sum(self.phase_seconds.values())
-
-    @property
-    def io_bytes(self) -> int:
-        return self.bytes_read + self.bytes_written
-
-    def rate_mb_s(self) -> float:
-        total = self.n_records * gensort.RECORD_BYTES
-        return total / max(self.total_seconds, 1e-9) / 1e6
+__all__ = ["SortStats", "SortPipelineConfig", "sort_file"]
 
 
 class _Timer:
+    """Accumulating phase timer used by the sequential baselines
+    (mergesort/terasort), which keep single-threaded accounting."""
+
     def __init__(self, stats: SortStats, phase: str):
         self.stats, self.phase = stats, phase
 
@@ -68,38 +48,6 @@ class _Timer:
         self.stats.phase_seconds[self.phase] = self.stats.phase_seconds.get(
             self.phase, 0.0
         ) + (time.perf_counter() - self.t0)
-
-
-def _sample_file(
-    path: str,
-    n_records: int,
-    sample_frac: float,
-    batch: int,
-    n_stripes: int = 64,
-) -> np.ndarray:
-    """Uniform key sample, capped at 10M (paper §3.1/§6).
-
-    The paper samples from "the first batch read by thread T0" — but its r
-    reader threads each own a different stripe of the file, so the union of
-    first batches spans the whole input.  With a single reader we emulate
-    that by sampling contiguous runs from ``n_stripes`` evenly-spaced file
-    offsets (still mostly-sequential I/O, unlike per-record random reads).
-    """
-    take = min(max(int(n_records * sample_frac), 1024), 10_000_000, n_records)
-    recs = gensort.read_records(path)
-    per_stripe = max(take // n_stripes, 16)
-    rng = np.random.default_rng(0)
-    keys = []
-    for s in range(n_stripes):
-        start = int(s * n_records / n_stripes)
-        run = np.array(
-            recs[start : min(start + per_stripe, n_records), : gensort.KEY_BYTES]
-        )
-        keys.append(run)
-    out = np.concatenate(keys)
-    if out.shape[0] > take:
-        out = out[rng.choice(out.shape[0], take, replace=False)]
-    return out
 
 
 def sort_file(
@@ -115,116 +63,28 @@ def sort_file(
     use_kernels: bool = False,
     device_sort: bool = False,
     keep_stats: bool = True,
+    n_readers: int = 1,
+    n_sorters: int = 1,
 ) -> SortStats:
-    """Sort a record file with ELSAR. Returns instrumentation stats."""
-    stats = SortStats()
+    """Sort a record file with ELSAR. Returns instrumentation stats.
+
+    ``n_readers`` is the paper's r (§3.2): the number of striped reader
+    threads in the partition phase.  Output is byte-identical for every
+    reader count; > 1 additionally overlaps the partition/sort/write
+    phases (visible as ``stats.overlap_seconds > 0``).
+    """
+    del keep_stats  # accepted for compatibility; stats are always kept
     device_sort = device_sort or use_kernels  # kernels imply device path
-    file_bytes = os.path.getsize(input_path)
-    n = file_bytes // gensort.RECORD_BYTES
-    stats.n_records = n
-
-    # partitions sized so one partition fits comfortably in the budget
-    if n_partitions == 0:
-        part_bytes_target = max(memory_budget_bytes // 4, 1 << 20)
-        n_partitions = max(
-            1, int(np.ceil(file_bytes / part_bytes_target))
-        )
-
-    # --- line 1: preallocate output (sparse on ext4/xfs)
-    with _Timer(stats, "setup"):
-        with open(output_path, "wb") as f:
-            f.truncate(file_bytes)
-
-    # --- line 2: train the CDF model
-    with _Timer(stats, "train"):
-        sample = _sample_file(input_path, n, sample_frac, batch_records)
-        stats.bytes_read += sample.shape[0] * gensort.KEY_BYTES
-        if n_leaf == 0:
-            # plenty of leaves (production RMIs use 1e4-1e6): a skew spike
-            # must get its own leaf for the local-frame precision to engage
-            n_leaf = int(min(65536, max(1024, sample.shape[0] // 4)))
-        model = rmi.fit(sample, n_leaf=n_leaf)
-
-    # --- lines 6-20: stream batches, route records to partition spill files
-    tmp = tempfile.mkdtemp(prefix="elsar_", dir=workdir)
-    part_paths = [os.path.join(tmp, f"p{j:05d}.bin") for j in range(n_partitions)]
-    part_files = [open(p, "wb", buffering=1 << 20) for p in part_paths]
-    counts = np.zeros(n_partitions, dtype=np.int64)
-    src = gensort.read_records(input_path)
-    with _Timer(stats, "partition"):
-        for off in range(0, n, batch_records):
-            batch = np.asarray(src[off : off + batch_records])
-            stats.bytes_read += batch.nbytes
-            keys = batch[:, : gensort.KEY_BYTES]
-            from repro.core import encoding
-
-            hi, lo = encoding.encode_np(keys)
-            bucket = rmi.predict_bucket_np(model, hi, lo, n_partitions)
-            # stable group-by-bucket, then ONE contiguous write per fragment
-            order = np.argsort(bucket, kind="stable")
-            grouped = batch[order]
-            bcounts = np.bincount(bucket, minlength=n_partitions)
-            starts = np.concatenate([[0], np.cumsum(bcounts)[:-1]])
-            for j in np.nonzero(bcounts)[0]:
-                frag = grouped[starts[j] : starts[j] + bcounts[j]]
-                part_files[j].write(frag.tobytes())
-                stats.bytes_written += frag.nbytes
-            counts += bcounts
-    for f in part_files:
-        f.close()
-    stats.partition_counts = counts.tolist()
-
-    # --- lines 22-31: sort each partition, write at its offset
-    out = open(output_path, "r+b")
-    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]) * gensort.RECORD_BYTES
-    for j in range(n_partitions):
-        if counts[j] == 0:
-            os.unlink(part_paths[j])
-            continue
-        with _Timer(stats, "sort_read"):
-            part = np.fromfile(part_paths[j], dtype=np.uint8).reshape(
-                -1, gensort.RECORD_BYTES
-            )
-            stats.bytes_read += part.nbytes
-            os.unlink(part_paths[j])  # paper: close+remove frees memory early
-        with _Timer(stats, "sort"):
-            if device_sort:
-                from repro.core import encoding
-                from repro.core.encoding import SENTINEL
-
-                m = part.shape[0]
-                hi, lo = encoding.encode_np(part[:, : gensort.KEY_BYTES])
-                # pad to the next power of two so jit sees O(log) distinct
-                # shapes across partitions, not one compile per partition
-                m_pad = 1 << max(0, (m - 1)).bit_length()
-                if m_pad != m:
-                    hi = np.concatenate([hi, np.full(m_pad - m, SENTINEL)])
-                    lo = np.concatenate([lo, np.full(m_pad - m, SENTINEL)])
-                _, _, perm = learned_sort.sort_device(
-                    model,
-                    jnp.asarray(hi),
-                    jnp.asarray(lo),
-                    use_kernels=use_kernels,
-                )
-                perm = np.asarray(perm)
-                perm = perm[perm < m]  # drop sentinel padding
-                sorted_part = part[perm]
-                # touch-up beyond byte 8 (paper's strncmp step §4)
-                k = validate.keys_view(sorted_part)
-                if (k[:-1] > k[1:]).any():
-                    sorted_part = sorted_part[np.argsort(k, kind="stable")]
-            else:
-                # host LearnedSort (bucket + radix place + touch-up): no
-                # per-partition device dispatch — see §Perf
-                perm = learned_sort.sort_host(
-                    model, part[:, : gensort.KEY_BYTES]
-                )
-                sorted_part = part[perm]
-        with _Timer(stats, "write"):
-            # coalesced sequential write at the precomputed offset (§3.5)
-            out.seek(offsets[j])
-            out.write(sorted_part.tobytes())
-            stats.bytes_written += sorted_part.nbytes
-    out.close()
-    os.rmdir(tmp)
-    return stats
+    cfg = SortPipelineConfig(
+        n_readers=n_readers,
+        n_sorters=n_sorters,
+        memory_budget_bytes=memory_budget_bytes,
+        batch_records=batch_records,
+        n_partitions=n_partitions,
+        sample_frac=sample_frac,
+        n_leaf=n_leaf,
+        workdir=workdir,
+        use_kernels=use_kernels,
+        device_sort=device_sort,
+    )
+    return run_pipeline(input_path, output_path, cfg)

@@ -1,0 +1,699 @@
+"""Pipelined, parallel ELSAR runtime (paper §3.2 + Fig. 6; DESIGN.md §1).
+
+The paper's headline result comes from r parallel reader threads and from
+overlapping the partition, sort, and write phases.  This module is that
+runtime: five composable phase stages
+
+    Sample -> Train -> Partition -> Sort -> Write
+
+connected by bounded queues, with
+
+* an r-way **striped reader pool** — each reader owns contiguous stripes
+  of the input (data/pipeline.record_stripes), predicts partition ids with
+  the shared RMI, and appends records to per-partition spill files;
+* **per-reader fragment buffers** flushed with coalesced (>= flush_bytes)
+  writes, so spill I/O stays sequential per partition;
+* a **fragment index**: every flushed fragment is tagged (stripe, seq), so
+  the loader reconstructs exact global input order no matter which reader
+  flushed first.  Output is therefore byte-identical for any ``n_readers``
+  — ties between equal keys stay in input order, matching both the
+  sequential path and the stable mergesort baseline;
+* a sort/write stage that begins **draining completed spill fragments
+  while partitioning of later stripes is still in flight** (the loader
+  pre-reads committed fragments of upcoming partitions), then pipelines
+  load -> sort -> write across partitions once fragment sets are final.
+
+A partition's fragment *set* is only final once every reader has finished
+(any input record can map to any partition), so the sort proper starts at
+that point; the measurable overlap comes from (a) the r-way read
+parallelism inside the partition phase, (b) the eager fragment drain, and
+(c) the load/sort/write pipeline across partitions.
+
+Instrumentation (``SortStats``): per-phase *busy* seconds (summed over
+workers — the sequential-equivalent cost, and exactly the old accounting
+when ``n_readers == 1``), per-phase *wall-clock spans*, per-phase *thread
+CPU* seconds, and the end-to-end ``wall_seconds``.  Phase overlap is then
+visible as ``sum(phase_seconds.values()) > wall_seconds``.
+
+Memory: partitions are sized to ``memory_budget_bytes / 4`` (as before);
+the bounded queues keep at most ``2 * queue_depth + 2`` partitions plus
+one prefetch window resident, so peak use stays within a small multiple of
+the budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import rmi
+from repro.data import gensort
+from repro.data.pipeline import record_stripes, stripe_batches
+
+
+# ---------------------------------------------------------------------------
+# Instrumentation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SortStats:
+    """Instrumentation for one file sort.
+
+    ``phase_seconds`` are busy seconds *summed across workers* (the
+    sequential-equivalent cost; identical to the historical accounting when
+    ``n_readers == 1``).  ``phase_wall_seconds`` is each phase's span from
+    first start to last finish, and ``wall_seconds`` the end-to-end span —
+    so ``total_seconds > wall_seconds`` is the signature of phase overlap
+    (paper Fig. 6's pipelining effect).
+    """
+
+    n_records: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    phase_seconds: dict = dataclasses.field(default_factory=dict)
+    partition_counts: list = dataclasses.field(default_factory=list)
+    fallbacks: int = 0
+    # pipelined-runtime additions
+    n_readers: int = 1
+    wall_seconds: float = 0.0
+    phase_wall_seconds: dict = dataclasses.field(default_factory=dict)
+    phase_cpu_seconds: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.phase_seconds.values())
+
+    @property
+    def io_bytes(self) -> int:
+        return self.bytes_read + self.bytes_written
+
+    @property
+    def overlap_seconds(self) -> float:
+        """Busy seconds hidden by pipelining/parallelism (0 if sequential)."""
+        if not self.wall_seconds:
+            return 0.0
+        return max(0.0, self.total_seconds - self.wall_seconds)
+
+    def rate_mb_s(self) -> float:
+        total = self.n_records * gensort.RECORD_BYTES
+        elapsed = self.wall_seconds or self.total_seconds
+        return total / max(elapsed, 1e-9) / 1e6
+
+
+class PhaseClock:
+    """Thread-safe phase accounting shared by every stage worker.
+
+    ``timer(phase)`` context-manages one busy interval: busy seconds are
+    summed per phase, wall spans are merged (min start / max end), and
+    thread CPU time is accumulated via ``time.thread_time``.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.busy: dict[str, float] = {}
+        self.cpu: dict[str, float] = {}
+        self.span: dict[str, list[float]] = {}
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+    def timer(self, phase: str) -> "_PhaseTimer":
+        return _PhaseTimer(self, phase)
+
+    def add_io(self, read: int = 0, written: int = 0) -> None:
+        with self._lock:
+            self.bytes_read += read
+            self.bytes_written += written
+
+    def _record(self, phase: str, t0: float, t1: float, cpu_dt: float) -> None:
+        with self._lock:
+            self.busy[phase] = self.busy.get(phase, 0.0) + (t1 - t0)
+            self.cpu[phase] = self.cpu.get(phase, 0.0) + cpu_dt
+            span = self.span.setdefault(phase, [t0, t1])
+            span[0] = min(span[0], t0)
+            span[1] = max(span[1], t1)
+
+    def finish(self, stats: SortStats) -> None:
+        stats.wall_seconds = time.perf_counter() - self._t0
+        stats.phase_seconds = dict(self.busy)
+        stats.phase_cpu_seconds = dict(self.cpu)
+        stats.phase_wall_seconds = {
+            p: s[1] - s[0] for p, s in self.span.items()
+        }
+        stats.bytes_read += self.bytes_read
+        stats.bytes_written += self.bytes_written
+
+
+class _PhaseTimer:
+    def __init__(self, clock: PhaseClock, phase: str):
+        self.clock, self.phase = clock, phase
+        self._discarded = False
+
+    def discard(self) -> None:
+        """Drop this interval (e.g. an idle poll that did no phase work) —
+        otherwise empty polls would stretch the phase's wall span."""
+        self._discarded = True
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        self.c0 = time.thread_time()
+        return self
+
+    def __exit__(self, *exc):
+        if not self._discarded:
+            self.clock._record(
+                self.phase,
+                self.t0,
+                time.perf_counter(),
+                time.thread_time() - self.c0,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Spill files with a fragment index
+# ---------------------------------------------------------------------------
+
+
+class PartitionSpill:
+    """One partition's spill file: coalesced appends + a fragment index.
+
+    Writers (readers of the input) append pre-coalesced fragment blobs
+    under a lock, each tagged ``(stripe, seq)``.  The loader side runs in a
+    single thread and may ``prefetch()`` committed fragments *while writers
+    are still appending* — segments are recorded only after their bytes hit
+    the file, so reading a recorded segment is always safe.  ``take()``
+    finalizes: reads the rest, reorders fragments by (stripe, seq) into
+    global input order, and deletes the file.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f = None
+        self._pos = 0
+        self.n_records = 0
+        self.segments: list[tuple[int, int, int, int]] = []  # stripe, seq, off, len
+        self._loaded: dict[int, bytes] = {}  # loader-thread-only
+        self._read_fd = -1
+
+    # -- writer side (reader pool) ------------------------------------
+    def append(self, stripe: int, seq: int, blob: bytes) -> None:
+        with self._lock:
+            if self._f is None:
+                self._f = open(self.path, "wb", buffering=0)
+            self._f.write(blob)
+            self.segments.append((stripe, seq, self._pos, len(blob)))
+            self._pos += len(blob)
+            self.n_records += len(blob) // gensort.RECORD_BYTES
+
+    def close_writer(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+    # -- loader side (single thread) ----------------------------------
+    def prefetch(self) -> int:
+        """Read committed-but-unread fragments; returns bytes read now."""
+        with self._lock:
+            committed = len(self.segments)
+        done = 0
+        for i in range(committed):
+            if i in self._loaded:
+                continue
+            _, _, off, nbytes = self.segments[i]
+            if self._read_fd < 0:
+                self._read_fd = os.open(self.path, os.O_RDONLY)
+            self._loaded[i] = os.pread(self._read_fd, nbytes, off)
+            done += nbytes
+        return done
+
+    def take(self) -> tuple[np.ndarray | None, int]:
+        """Finalize after ``close_writer``: returns (records, fresh_bytes).
+
+        Records come back in global input order (fragments sorted by
+        (stripe, seq)); the spill file is deleted.  ``fresh_bytes`` counts
+        only bytes read by *this* call, so prefetched bytes are never
+        double-counted.
+        """
+        fresh = self.prefetch()
+        order = sorted(
+            range(len(self.segments)), key=lambda i: self.segments[i][:2]
+        )
+        if self._read_fd >= 0:
+            os.close(self._read_fd)
+            self._read_fd = -1
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+        if not order:
+            return None, fresh
+        blob = b"".join(self._loaded[i] for i in order)
+        self._loaded.clear()
+        recs = np.frombuffer(blob, dtype=np.uint8).reshape(
+            -1, gensort.RECORD_BYTES
+        )
+        return recs, fresh
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SortPipelineConfig:
+    """Knobs for the pipelined runtime (defaults = historical behavior)."""
+
+    n_readers: int = 1  # r in paper §3.2
+    n_sorters: int = 1
+    memory_budget_bytes: int = 256 << 20
+    batch_records: int = 500_000
+    n_partitions: int = 0  # 0 -> sized from the budget
+    sample_frac: float = 0.01
+    n_leaf: int = 0  # 0 -> sized from the sample
+    workdir: str | None = None
+    use_kernels: bool = False
+    device_sort: bool = False
+    stripes_per_reader: int = 4  # work-stealing granularity
+    flush_bytes: int = 1 << 20  # coalesced-spill threshold per fragment
+    queue_depth: int = 2  # bound on each inter-stage queue
+
+
+class _Abort(Exception):
+    pass
+
+
+def _put(q: queue.Queue, item, abort: threading.Event) -> None:
+    while True:
+        try:
+            q.put(item, timeout=0.2)
+            return
+        except queue.Full:
+            if abort.is_set():
+                raise _Abort()
+
+
+def _get(q: queue.Queue, abort: threading.Event):
+    while True:
+        try:
+            return q.get(timeout=0.2)
+        except queue.Empty:
+            if abort.is_set():
+                raise _Abort()
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+def _sample_stage(path: str, n_records: int, sample_frac: float) -> np.ndarray:
+    """Uniform key sample, capped at 10M (paper §3.1/§6).
+
+    The paper samples from "the first batch read by thread T0" — but its r
+    reader threads each own a different stripe of the file, so the union of
+    first batches spans the whole input.  We emulate that with contiguous
+    runs from 64 evenly-spaced file offsets (mostly-sequential I/O).  The
+    sample is independent of ``n_readers``, so every reader count trains
+    the identical model and produces identical partitions.
+    """
+    n_stripes = 64
+    take = min(
+        max(int(n_records * sample_frac), 1024), 10_000_000, n_records
+    )
+    recs = gensort.read_records(path)
+    per_stripe = max(take // n_stripes, 16)
+    rng = np.random.default_rng(0)
+    keys = []
+    for s in range(n_stripes):
+        start = int(s * n_records / n_stripes)
+        run = np.array(
+            recs[start : min(start + per_stripe, n_records), : gensort.KEY_BYTES]
+        )
+        keys.append(run)
+    out = np.concatenate(keys)
+    if out.shape[0] > take:
+        out = out[rng.choice(out.shape[0], take, replace=False)]
+    return out
+
+
+def _train_stage(sample: np.ndarray, n_leaf: int) -> rmi.RMIParams:
+    if n_leaf == 0:
+        # plenty of leaves (production RMIs use 1e4-1e6): a skew spike
+        # must get its own leaf for the local-frame precision to engage
+        n_leaf = int(min(65536, max(1024, sample.shape[0] // 4)))
+    return rmi.fit(sample, n_leaf=n_leaf)
+
+
+def _reader_worker(
+    clock: PhaseClock,
+    model: rmi.RMIParams,
+    spills: list[PartitionSpill],
+    n_partitions: int,
+    stripe_q: "queue.SimpleQueue",
+    input_path: str,
+    cfg: SortPipelineConfig,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    """One reader: pull stripes, predict partitions, buffer + flush fragments.
+
+    Buffers are flushed at ``flush_bytes`` and always at stripe end, so no
+    fragment ever spans a stripe boundary — the (stripe, seq) tag stays a
+    total order over input positions.
+    """
+    from repro.core import encoding
+
+    # with many partitions no single buffer may ever reach flush_bytes, so
+    # the per-reader TOTAL is also capped at a fair share of the budget —
+    # when exceeded, the largest buffer flushes (fewer, bigger fragments)
+    reader_cap = max(
+        cfg.flush_bytes,
+        cfg.memory_budget_bytes // max(4 * cfg.n_readers, 1),
+    )
+    try:
+        while not abort.is_set():
+            try:
+                stripe = stripe_q.get_nowait()
+            except queue.Empty:
+                return
+            with clock.timer("partition"):
+                # fragments are buffered as bytes (not views) so a drained
+                # batch's memory is released as soon as the batch is routed
+                bufs: dict[int, list[bytes]] = {}
+                buf_bytes: dict[int, int] = {}
+                seqs: dict[int, int] = {}
+                total = 0
+
+                def flush(j: int) -> None:
+                    nonlocal total
+                    blob = b"".join(bufs.pop(j))
+                    total -= buf_bytes.pop(j)
+                    spills[j].append(stripe.index, seqs.get(j, 0), blob)
+                    seqs[j] = seqs.get(j, 0) + 1
+                    clock.add_io(written=len(blob))
+
+                for _, batch in stripe_batches(
+                    input_path, stripe, cfg.batch_records
+                ):
+                    clock.add_io(read=batch.nbytes)
+                    keys = batch[:, : gensort.KEY_BYTES]
+                    hi, lo = encoding.encode_np(keys)
+                    bucket = rmi.predict_bucket_np(model, hi, lo, n_partitions)
+                    # stable group-by-bucket, then contiguous fragment slices
+                    order = np.argsort(bucket, kind="stable")
+                    grouped = batch[order]
+                    bcounts = np.bincount(bucket, minlength=n_partitions)
+                    starts = np.concatenate([[0], np.cumsum(bcounts)[:-1]])
+                    for j in np.nonzero(bcounts)[0]:
+                        frag = grouped[starts[j] : starts[j] + bcounts[j]]
+                        bufs.setdefault(j, []).append(frag.tobytes())
+                        buf_bytes[j] = buf_bytes.get(j, 0) + frag.nbytes
+                        total += frag.nbytes
+                        if buf_bytes[j] >= cfg.flush_bytes:
+                            flush(j)
+                    while total >= reader_cap:
+                        flush(max(buf_bytes, key=buf_bytes.get))
+                for j in list(bufs):
+                    flush(j)
+    except _Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()
+
+
+def _loader_worker(
+    clock: PhaseClock,
+    spills: list[PartitionSpill],
+    offsets_box: dict,
+    partition_done: threading.Event,
+    sort_q: queue.Queue,
+    cfg: SortPipelineConfig,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    """Drain spilled fragments into memory and feed the sorter(s).
+
+    While the partition phase is in flight, eagerly pre-reads fragments
+    already committed for the next few partitions (bounded window); once
+    fragment sets are final, emits partitions in ascending key order.
+    """
+    try:
+        emit = 0
+        window = cfg.queue_depth + 1
+        n_parts = len(spills)
+        while emit < n_parts and not abort.is_set():
+            if partition_done.is_set():
+                with clock.timer("sort_read"):
+                    recs, fresh = spills[emit].take()
+                    clock.add_io(read=fresh)
+                if recs is not None:
+                    _put(sort_q, (offsets_box["offsets"][emit], recs), abort)
+                emit += 1
+            else:
+                progressed = 0
+                for k in range(emit, min(emit + window, n_parts)):
+                    with clock.timer("sort_read") as t:
+                        got = spills[k].prefetch()
+                        clock.add_io(read=got)
+                        if not got:
+                            t.discard()  # idle poll, not sort_read work
+                    progressed += got
+                if not progressed:
+                    partition_done.wait(0.02)
+        for _ in range(cfg.n_sorters):
+            _put(sort_q, None, abort)
+    except _Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()
+
+
+def _sort_partition(
+    model: rmi.RMIParams,
+    part: np.ndarray,
+    *,
+    device_sort: bool,
+    use_kernels: bool,
+) -> np.ndarray:
+    """Sort one partition's records (host LearnedSort or device path)."""
+    from repro.core import learned_sort
+
+    if device_sort:
+        import jax.numpy as jnp
+
+        from repro.core import encoding, validate
+        from repro.core.encoding import SENTINEL
+
+        m = part.shape[0]
+        hi, lo = encoding.encode_np(part[:, : gensort.KEY_BYTES])
+        # pad to the next power of two so jit sees O(log) distinct
+        # shapes across partitions, not one compile per partition
+        m_pad = 1 << max(0, (m - 1)).bit_length()
+        if m_pad != m:
+            hi = np.concatenate([hi, np.full(m_pad - m, SENTINEL)])
+            lo = np.concatenate([lo, np.full(m_pad - m, SENTINEL)])
+        _, _, perm = learned_sort.sort_device(
+            model, jnp.asarray(hi), jnp.asarray(lo), use_kernels=use_kernels
+        )
+        perm = np.asarray(perm)
+        perm = perm[perm < m]  # drop sentinel padding
+        sorted_part = part[perm]
+        # touch-up beyond byte 8 (paper's strncmp step §4)
+        k = validate.keys_view(sorted_part)
+        if (k[:-1] > k[1:]).any():
+            sorted_part = sorted_part[np.argsort(k, kind="stable")]
+        return sorted_part
+    # host LearnedSort (bucket + radix place + touch-up): no per-partition
+    # device dispatch — see learned_sort.sort_host
+    perm = learned_sort.sort_host(model, part[:, : gensort.KEY_BYTES])
+    return part[perm]
+
+
+def _sorter_worker(
+    clock: PhaseClock,
+    model: rmi.RMIParams,
+    sort_q: queue.Queue,
+    write_q: queue.Queue,
+    cfg: SortPipelineConfig,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    try:
+        while True:
+            item = _get(sort_q, abort)
+            if item is None:
+                _put(write_q, None, abort)
+                return
+            offset, part = item
+            with clock.timer("sort"):
+                sorted_part = _sort_partition(
+                    model,
+                    part,
+                    device_sort=cfg.device_sort,
+                    use_kernels=cfg.use_kernels,
+                )
+            _put(write_q, (offset, sorted_part), abort)
+    except _Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()
+
+
+def _writer_worker(
+    clock: PhaseClock,
+    output_path: str,
+    write_q: queue.Queue,
+    n_sorters: int,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    """Single writer: coalesced sequential write at each precomputed offset
+    (§3.5).  Offsets ride with the records, so out-of-order arrival from a
+    sorter pool is harmless — no merge, just positioned writes."""
+    try:
+        out = open(output_path, "r+b")
+        try:
+            remaining = n_sorters
+            while remaining:
+                item = _get(write_q, abort)
+                if item is None:
+                    remaining -= 1
+                    continue
+                offset, sorted_part = item
+                with clock.timer("write"):
+                    out.seek(offset)
+                    out.write(sorted_part.tobytes())
+                    clock.add_io(written=sorted_part.nbytes)
+        finally:
+            out.close()
+    except _Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator
+# ---------------------------------------------------------------------------
+
+
+def run_pipeline(
+    input_path: str, output_path: str, cfg: SortPipelineConfig
+) -> SortStats:
+    """Sort ``input_path`` into ``output_path`` with the pipelined runtime."""
+    if cfg.n_readers < 1 or cfg.n_sorters < 1:
+        raise ValueError(
+            f"n_readers and n_sorters must be >= 1, got "
+            f"{cfg.n_readers}/{cfg.n_sorters}"
+        )
+    stats = SortStats()
+    clock = PhaseClock()
+    stats.n_readers = cfg.n_readers
+    file_bytes = os.path.getsize(input_path)
+    n = file_bytes // gensort.RECORD_BYTES
+    stats.n_records = n
+
+    if n == 0:  # nothing to sort; still produce the (empty) output
+        with clock.timer("setup"):
+            open(output_path, "wb").close()
+        clock.finish(stats)
+        return stats
+
+    # partitions sized so one partition fits comfortably in the budget
+    n_partitions = cfg.n_partitions
+    if n_partitions == 0:
+        part_bytes_target = max(cfg.memory_budget_bytes // 4, 1 << 20)
+        n_partitions = max(1, int(np.ceil(file_bytes / part_bytes_target)))
+
+    # --- Alg. 1 line 1: preallocate output (sparse on ext4/xfs)
+    with clock.timer("setup"):
+        with open(output_path, "wb") as f:
+            f.truncate(file_bytes)
+
+    # --- Sample + Train stages (Alg. 1 line 2)
+    with clock.timer("train"):
+        sample = _sample_stage(input_path, n, cfg.sample_frac)
+        clock.add_io(read=sample.shape[0] * gensort.KEY_BYTES)
+        model = _train_stage(sample, cfg.n_leaf)
+
+    # --- Partition / Sort / Write stages, queue-connected
+    tmp = tempfile.mkdtemp(prefix="elsar_", dir=cfg.workdir)
+    spills = [
+        PartitionSpill(os.path.join(tmp, f"p{j:05d}.bin"))
+        for j in range(n_partitions)
+    ]
+    stripe_q: queue.SimpleQueue = queue.SimpleQueue()
+    for stripe in record_stripes(n, cfg.n_readers * cfg.stripes_per_reader):
+        stripe_q.put(stripe)
+    sort_q: queue.Queue = queue.Queue(maxsize=cfg.queue_depth)
+    write_q: queue.Queue = queue.Queue(maxsize=cfg.queue_depth)
+    partition_done = threading.Event()
+    abort = threading.Event()
+    offsets_box: dict = {}
+    errors: list = []
+
+    readers = [
+        threading.Thread(
+            target=_reader_worker,
+            args=(clock, model, spills, n_partitions, stripe_q, input_path,
+                  cfg, abort, errors),
+            name=f"elsar-reader-{i}",
+            daemon=True,
+        )
+        for i in range(cfg.n_readers)
+    ]
+    loader = threading.Thread(
+        target=_loader_worker,
+        args=(clock, spills, offsets_box, partition_done, sort_q, cfg, abort,
+              errors),
+        name="elsar-loader",
+        daemon=True,
+    )
+    sorters = [
+        threading.Thread(
+            target=_sorter_worker,
+            args=(clock, model, sort_q, write_q, cfg, abort, errors),
+            name=f"elsar-sorter-{i}",
+            daemon=True,
+        )
+        for i in range(cfg.n_sorters)
+    ]
+    writer = threading.Thread(
+        target=_writer_worker,
+        args=(clock, output_path, write_q, cfg.n_sorters, abort, errors),
+        name="elsar-writer",
+        daemon=True,
+    )
+
+    for t in [loader, writer, *sorters, *readers]:
+        t.start()
+    for t in readers:
+        t.join()
+    for spill in spills:
+        spill.close_writer()
+    counts = [spill.n_records for spill in spills]
+    stats.partition_counts = counts
+    offsets_box["offsets"] = (
+        np.concatenate([[0], np.cumsum(counts)[:-1]]) * gensort.RECORD_BYTES
+    )
+    partition_done.set()
+    for t in [loader, *sorters, writer]:
+        t.join()
+
+    if errors:
+        raise errors[0]
+    os.rmdir(tmp)
+    clock.finish(stats)
+    return stats
