@@ -1,0 +1,73 @@
+"""Serving rates over sorted output (DESIGN.md §7): batched point lookups
+and concurrent range scans through the learned-index manifest, on the
+axes batch size x point/range mix x uniform/skewed gensort."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks import common
+from repro.core import external
+from repro.launch.query import make_workload
+from repro.serve.index import SortedFileIndex
+from repro.serve.query_engine import QueryEngine
+
+BATCHES = (1, 64)
+# fraction of the workload that is point lookups (rest: range scans)
+POINT_MIXES = (1.0, 0.9, 0.0)
+N_POINTS = 2048
+N_RANGES = 64
+RANGE_RECORDS = 500
+
+
+def run(n_records: int = 1_000_000, n_workers: int = 4) -> list[dict]:
+    rows = []
+    for skewed in (False, True):
+        path, _ = common.dataset(n_records, skewed)
+        dist = "skewed" if skewed else "uniform"
+        with tempfile.TemporaryDirectory(dir=common.CACHE_DIR) as tmp:
+            out = os.path.join(tmp, "sorted.bin")
+            external.sort_file(
+                path, out, memory_budget_bytes=128 << 20, n_readers=2,
+                manifest=True,
+            )
+            index = SortedFileIndex.open(out)
+            points, ranges = make_workload(
+                index, N_POINTS, N_RANGES, RANGE_RECORDS, seed=0
+            )
+            for batch in BATCHES:
+                for frac in POINT_MIXES:
+                    n_p = int(N_POINTS * frac)
+                    n_r = int(N_RANGES * (1.0 - frac))
+                    with QueryEngine(index, n_workers=n_workers) as eng:
+                        for i in range(0, n_p, batch):
+                            eng.point(points[i : i + batch])
+                        if n_r:
+                            eng.range(ranges[:n_r])
+                    s = eng.stats
+                    rows.append({
+                        "dist": dist,
+                        "batch": batch,
+                        "mix": f"p{int(frac * 100)}",
+                        "qps": s.qps,
+                        "p50_ms": s.latency_ms(50),
+                        "p99_ms": s.latency_ms(99),
+                        "fallbacks": s.fallbacks,
+                        "seconds": s.wall_seconds,
+                    })
+    return rows
+
+
+def main(n_records: int = 1_000_000):
+    for r in run(n_records):
+        common.emit(
+            f"serve_query_{r['dist']}_b{r['batch']}_{r['mix']}",
+            r["seconds"] * 1e6,
+            f"qps={r['qps']:.0f} p50={r['p50_ms']:.3f}ms "
+            f"p99={r['p99_ms']:.3f}ms fallbacks={r['fallbacks']}",
+        )
+
+
+if __name__ == "__main__":
+    main(int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000)))

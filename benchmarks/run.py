@@ -18,6 +18,7 @@ def main() -> None:
         joulesort,
         partition_variance,
         phase_breakdown,
+        query_rates,
         scalability,
         sort_rates,
     )
@@ -34,6 +35,7 @@ def main() -> None:
         ("fig6_phase_breakdown", lambda: phase_breakdown.main(
             ["--records", str(n)])),
         ("fig7_io_stats", lambda: io_stats.main(n)),
+        ("serve_query_rates", lambda: query_rates.main(n)),
     ]
     failures = 0
     for name, fn in suites:

@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import distributed, encoding, rmi
 from repro.data import gensort
+from repro.launch.mesh import make_mesh
 
 
 def main():
@@ -36,8 +37,7 @@ def main():
     model = rmi.fit(sample, n_leaf=4096)
 
     print("[3/4] shard_map sort: route -> all_to_all -> LearnedSort ...")
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     fn = distributed.make_sort_fn(
         mesh, ("data",), model, n_per_device=n // 8, use_kernels=False
     )

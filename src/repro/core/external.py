@@ -65,6 +65,7 @@ def sort_file(
     keep_stats: bool = True,
     n_readers: int = 1,
     n_sorters: int = 1,
+    manifest: bool = False,
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
 
@@ -72,6 +73,10 @@ def sort_file(
     threads in the partition phase.  Output is byte-identical for every
     reader count; > 1 additionally overlaps the partition/sort/write
     phases (visible as ``stats.overlap_seconds > 0``).
+
+    ``manifest=True`` additionally emits ``<output>.manifest.npz`` — the
+    trained model + partition map + error band that turns the sorted file
+    into a servable learned index (``repro.serve.index``, DESIGN.md §7).
     """
     del keep_stats  # accepted for compatibility; stats are always kept
     device_sort = device_sort or use_kernels  # kernels imply device path
@@ -86,5 +91,6 @@ def sort_file(
         workdir=workdir,
         use_kernels=use_kernels,
         device_sort=device_sort,
+        emit_manifest=manifest,
     )
     return run_pipeline(input_path, output_path, cfg)

@@ -1,0 +1,163 @@
+"""Sidecar manifest over sorted ELSAR output (DESIGN.md §7).
+
+The learned CDF model does double duty: it partitions the input for
+sorting, and — because the output is a concatenation of monotone,
+equi-depth partitions — it is *already* a learned index over the sorted
+file.  The manifest persists everything query serving needs next to the
+output file (``<output>.manifest.npz``):
+
+* the trained :class:`repro.core.rmi.RMIParams` (a few KB of arrays),
+* per-partition record counts (byte offsets are derived),
+* partition boundary keys — the first key of each partition, with empty
+  partitions back-filled so the array stays monotone,
+* a measured prediction **error band** ``(err_lo, err_hi)``: the largest
+  observed under/overshoot (in records) of ``floor(F(key) * n)`` against
+  the key's true position, measured on a stride sample of the sorted
+  output plus slack.  Serving searches only this window around the
+  prediction and falls back to partition-boundary search when the window
+  misses, so an underestimated band costs latency, never correctness.
+
+Format version policy: ``MANIFEST_VERSION`` is a single integer bumped on
+any incompatible layout change; ``load`` refuses mismatched versions
+(re-sort or re-emit with ``build``/``save`` to upgrade — manifests are
+derived data, never the source of truth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import encoding, rmi
+from repro.data import gensort
+
+MANIFEST_VERSION = 1
+
+# error-band slack on top of the sampled max error: absorbs duplicates
+# whose leftmost occurrence sits before the sampled one, and f32 rounding
+_ERR_PAD = 32
+
+
+def manifest_path(sorted_path: str) -> str:
+    return sorted_path + ".manifest.npz"
+
+
+@dataclasses.dataclass(frozen=True)
+class SortManifest:
+    """Everything needed to serve point/range queries over sorted output."""
+
+    version: int
+    n_records: int
+    part_counts: np.ndarray  # (P,) int64 records per partition
+    boundary_keys: np.ndarray  # (P, KEY_BYTES) uint8 first key per partition
+    err_lo: int  # max observed (pred - true) overshoot, in records
+    err_hi: int  # max observed (true - pred) undershoot, in records
+    model: rmi.RMIParams
+
+    @property
+    def n_partitions(self) -> int:
+        return int(self.part_counts.shape[0])
+
+    def part_starts(self) -> np.ndarray:
+        """(P + 1,) record-index start of each partition (+ end sentinel)."""
+        return np.concatenate(
+            [[0], np.cumsum(self.part_counts)]
+        ).astype(np.int64)
+
+    def part_byte_offsets(self) -> np.ndarray:
+        """(P + 1,) byte offset of each partition in the sorted file."""
+        return self.part_starts() * gensort.RECORD_BYTES
+
+
+def build(
+    model: rmi.RMIParams,
+    part_counts: "list[int] | np.ndarray",
+    sorted_path: str,
+    *,
+    max_scan: int = 1 << 20,
+) -> SortManifest:
+    """Measure boundaries + error band over a freshly sorted file.
+
+    One mostly-sequential pass over at most ``max_scan`` stride-sampled
+    records (exact scan when the file is smaller).
+    """
+    recs = gensort.read_records(sorted_path)
+    n = recs.shape[0]
+    counts = np.asarray(part_counts, dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+
+    # boundary key = first key of the partition; empty partitions inherit
+    # the next non-empty one (monotone), trailing empties sort after all
+    p = counts.shape[0]
+    boundaries = np.full((p, gensort.KEY_BYTES), 0xFF, dtype=np.uint8)
+    nonempty = counts > 0
+    if nonempty.any():
+        boundaries[nonempty] = recs[starts[nonempty], : gensort.KEY_BYTES]
+        for j in range(p - 2, -1, -1):
+            if not nonempty[j] and starts[j] < n:
+                boundaries[j] = boundaries[j + 1]
+
+    err_lo = err_hi = 0
+    if n:
+        stride = max(1, -(-n // max_scan))
+        pos = np.arange(0, n, stride, dtype=np.int64)
+        hi, lo = encoding.encode_np(recs[pos, : gensort.KEY_BYTES])
+        cdf = rmi.predict_cdf_np(model, hi, lo)
+        pred = np.clip((cdf.astype(np.float64) * n).astype(np.int64), 0, n - 1)
+        delta = pred - pos
+        err_lo = int(max(0, delta.max())) + _ERR_PAD + stride
+        err_hi = int(max(0, -delta.min())) + _ERR_PAD + stride
+
+    return SortManifest(
+        version=MANIFEST_VERSION,
+        n_records=n,
+        part_counts=counts,
+        boundary_keys=boundaries,
+        err_lo=err_lo,
+        err_hi=err_hi,
+        model=model,
+    )
+
+
+def save(m: SortManifest, path: str) -> None:
+    """Persist as a single ``.npz`` (no deps beyond numpy)."""
+    payload = {
+        "version": np.int64(m.version),
+        "n_records": np.int64(m.n_records),
+        "part_counts": m.part_counts,
+        "boundary_keys": m.boundary_keys,
+        "err_lo": np.int64(m.err_lo),
+        "err_hi": np.int64(m.err_hi),
+    }
+    for f in dataclasses.fields(rmi.RMIParams):
+        payload["rmi_" + f.name] = np.asarray(getattr(m.model, f.name))
+    with open(path, "wb") as fh:
+        np.savez(fh, **payload)
+
+
+def load(path: str) -> SortManifest:
+    with np.load(path) as z:
+        version = int(z["version"])
+        if version != MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest {path!r} has format version {version}, this "
+                f"build reads {MANIFEST_VERSION}; re-emit the manifest "
+                f"(manifests are derived data — re-sort or rebuild)"
+            )
+        model = rmi.RMIParams(
+            **{
+                f.name: jnp.asarray(z["rmi_" + f.name])
+                for f in dataclasses.fields(rmi.RMIParams)
+            }
+        )
+        return SortManifest(
+            version=version,
+            n_records=int(z["n_records"]),
+            part_counts=z["part_counts"].astype(np.int64),
+            boundary_keys=z["boundary_keys"],
+            err_lo=int(z["err_lo"]),
+            err_hi=int(z["err_hi"]),
+            model=model,
+        )

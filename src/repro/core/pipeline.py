@@ -85,6 +85,8 @@ class SortStats:
     wall_seconds: float = 0.0
     phase_wall_seconds: dict = dataclasses.field(default_factory=dict)
     phase_cpu_seconds: dict = dataclasses.field(default_factory=dict)
+    # set when the sort also emitted a query-serving sidecar (DESIGN.md §7)
+    manifest_path: str | None = None
 
     @property
     def total_seconds(self) -> float:
@@ -284,6 +286,8 @@ class SortPipelineConfig:
     stripes_per_reader: int = 4  # work-stealing granularity
     flush_bytes: int = 1 << 20  # coalesced-spill threshold per fragment
     queue_depth: int = 2  # bound on each inter-stage queue
+    # emit <output>.manifest.npz for query serving (serve/index.py)
+    emit_manifest: bool = False
 
 
 class _Abort(Exception):
@@ -695,5 +699,14 @@ def run_pipeline(
     if errors:
         raise errors[0]
     os.rmdir(tmp)
+
+    if cfg.emit_manifest:
+        from repro.core import manifest as manifest_lib
+
+        with clock.timer("manifest"):
+            m = manifest_lib.build(model, counts, output_path)
+            mpath = manifest_lib.manifest_path(output_path)
+            manifest_lib.save(m, mpath)
+            stats.manifest_path = mpath
     clock.finish(stats)
     return stats

@@ -85,6 +85,25 @@ def rmi_bucket(
     return out[:n_orig]
 
 
+def rmi_predict_pos(
+    params: rmi_lib.RMIParams,
+    hi: jnp.ndarray,
+    lo: jnp.ndarray,
+    n_records: int,
+    *,
+    block_rows: int = 1024,
+) -> jnp.ndarray:
+    """Predicted row of each key in a sorted ``n_records`` file.
+
+    The serving hot path (DESIGN.md §7): the learned index's position
+    prediction is exactly the equi-depth bucket id at ``n_buckets ==
+    n_records``, so this reuses the fused RMI kernel unchanged.  f32
+    arithmetic makes the row exact below 2**24 records; above that the
+    rounding is absorbed by the manifest's error band.
+    """
+    return rmi_bucket(params, hi, lo, n_records, block_rows=block_rows)
+
+
 @functools.partial(jax.jit, static_argnames=("n_buckets", "block_rows"))
 def bucket_histogram(
     bucket_ids: jnp.ndarray, n_buckets: int, *, block_rows: int = 512

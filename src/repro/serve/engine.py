@@ -1,5 +1,9 @@
-"""Batched serving engine: jit'd prefill + decode loop with greedy
-sampling. The same serve_step the dry-run lowers at pod scale."""
+"""Batched LM serving engine: jit'd prefill + decode loop with greedy
+sampling. The same serve_step the dry-run lowers at pod scale.
+
+Query serving over *sorted ELSAR output* does not go through this decode
+loop — that workload is ``repro.serve.query_engine.QueryEngine`` over a
+``repro.serve.index.SortedFileIndex`` (DESIGN.md §7)."""
 
 from __future__ import annotations
 

@@ -1,0 +1,195 @@
+"""Learned-index query serving over sorted ELSAR output (DESIGN.md §7).
+
+A sorted ELSAR file is a concatenation of monotone equi-depth partitions,
+so the CDF model that produced it is already a learned index over it:
+``floor(F(key) * n)`` predicts a record's row to within the manifest's
+measured error band.  :class:`SortedFileIndex` mmaps the sorted file and
+answers point lookups and range scans with
+
+1. a vectorized RMI position prediction for the whole key batch,
+2. a bounded **last-mile binary search** inside the error-band window
+   around each prediction (one contiguous window read per query), and
+3. a **partition-boundary fallback** when the window provably missed:
+   the manifest's boundary keys narrow the answer to one partition span,
+   which is then bisected with O(log) single-record mmap probes.
+
+Step 2's result is trusted only when it is provably the *global* answer
+(strictly inside the window, or bracketed by the window's outer
+neighbors), so a too-small error band degrades latency, never
+correctness.  All comparisons are memcmp on the raw 10-byte keys — byte
+identical to the sorter's own order, including ties beyond the 8-byte
+numeric embedding.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core import encoding, manifest as manifest_lib, rmi
+from repro.data import gensort
+
+_KEY_DT = f"S{gensort.KEY_BYTES}"
+
+
+def _keys_s(records: np.ndarray) -> np.ndarray:
+    """Contiguous |S10| copy of a (small) record window's keys."""
+    keys = np.ascontiguousarray(records[:, : gensort.KEY_BYTES])
+    return keys.view([("k", _KEY_DT)])["k"].reshape(-1)
+
+
+class SortedFileIndex:
+    """Point/range queries over one sorted record file + its manifest."""
+
+    def __init__(self, sorted_path: str, manifest: manifest_lib.SortManifest):
+        self.path = sorted_path
+        self.manifest = manifest
+        self.records = gensort.read_records(sorted_path)  # (n, 100) mmap
+        self.n = self.records.shape[0]
+        if self.n != manifest.n_records:
+            raise ValueError(
+                f"{sorted_path!r} holds {self.n} records but its manifest "
+                f"says {manifest.n_records} — stale sidecar?"
+            )
+        # (P,) |S10| boundary keys + (P+1,) record starts for the fallback
+        self._bounds = np.ascontiguousarray(manifest.boundary_keys).view(
+            [("k", _KEY_DT)]
+        )["k"].reshape(-1)
+        self._starts = manifest.part_starts()
+        # serving counters (read by QueryStats); QueryEngine's scan pool
+        # calls _bound from worker threads, so increments take a lock
+        self.band_hits = 0
+        self.fallbacks = 0
+        self._stat_lock = threading.Lock()
+
+    @classmethod
+    def open(
+        cls, sorted_path: str, manifest_path: str | None = None
+    ) -> "SortedFileIndex":
+        """Attach to a sorted file; loads ``<path>.manifest.npz`` by default."""
+        mpath = manifest_path or manifest_lib.manifest_path(sorted_path)
+        return cls(sorted_path, manifest_lib.load(mpath))
+
+    # -- prediction ----------------------------------------------------
+
+    def predict_positions(
+        self, keys: np.ndarray, *, use_kernels: bool = False
+    ) -> np.ndarray:
+        """(B, K) u8 keys -> (B,) int64 predicted rows (vectorized RMI)."""
+        hi, lo = encoding.encode_np(keys)
+        if use_kernels:
+            import jax.numpy as jnp
+
+            from repro.kernels import ops
+
+            pos = np.asarray(
+                ops.rmi_predict_pos(
+                    self.manifest.model, jnp.asarray(hi), jnp.asarray(lo),
+                    self.n,
+                )
+            ).astype(np.int64)
+            return np.clip(pos, 0, self.n - 1)
+        cdf = rmi.predict_cdf_np(self.manifest.model, hi, lo)
+        return np.clip(
+            (cdf.astype(np.float64) * self.n).astype(np.int64), 0, self.n - 1
+        )
+
+    # -- search primitives ---------------------------------------------
+
+    def _key_at(self, i: int) -> bytes:
+        return self.records[i, : gensort.KEY_BYTES].tobytes()
+
+    def _banded(self, q: bytes, pred: int, side: str) -> int | None:
+        """searchsorted(q, side) inside the error-band window, or None
+        when the window result is not provably the global answer."""
+        m = self.manifest
+        a = max(0, int(pred) - m.err_lo)
+        b = min(self.n, int(pred) + m.err_hi + 1)
+        win = _keys_s(self.records[a:b])
+        r = a + int(np.searchsorted(win, q, side=side))
+        if r == a and a > 0:
+            prev = self._key_at(a - 1)
+            if not (prev < q if side == "left" else prev <= q):
+                return None
+        if r == b and b < self.n:
+            nxt = self._key_at(b)
+            if not (nxt >= q if side == "left" else nxt > q):
+                return None
+        return r
+
+    def _fallback(self, q: bytes, side: str) -> int:
+        """Partition-boundary search: boundary keys pin the answer to one
+        partition span, bisected with single-record mmap probes."""
+        j = int(np.searchsorted(self._bounds, q, side=side))
+        lo = int(self._starts[max(j - 1, 0)])
+        hi = int(self._starts[min(j, self.manifest.n_partitions)])
+        while lo < hi:
+            mid = (lo + hi) // 2
+            k = self._key_at(mid)
+            if k < q or (side == "right" and k == q):
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    def _bound(self, q: bytes, pred: int, side: str) -> int:
+        r = self._banded(q, pred, side)
+        if r is None:
+            with self._stat_lock:
+                self.fallbacks += 1
+            return self._fallback(q, side)
+        with self._stat_lock:
+            self.band_hits += 1
+        return r
+
+    def lower_bound(self, key: bytes, pred: int | None = None) -> int:
+        """First row with record key >= ``key`` (n when past the end)."""
+        if pred is None:
+            pred = int(self.predict_positions(self._as_batch(key))[0])
+        return self._bound(key, pred, "left")
+
+    def upper_bound(self, key: bytes, pred: int | None = None) -> int:
+        """First row with record key > ``key``."""
+        if pred is None:
+            pred = int(self.predict_positions(self._as_batch(key))[0])
+        return self._bound(key, pred, "right")
+
+    @staticmethod
+    def _as_batch(key: bytes) -> np.ndarray:
+        return np.frombuffer(key, dtype=np.uint8)[None, : gensort.KEY_BYTES]
+
+    # -- queries -------------------------------------------------------
+
+    def lookup(
+        self, keys: np.ndarray, *, use_kernels: bool = False
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched point lookup of (B, K) u8 keys.
+
+        Returns ``(rows, found)``: the row of the *first* record matching
+        each key (lower bound when absent) and a boolean hit mask.
+        """
+        preds = self.predict_positions(keys, use_kernels=use_kernels)
+        rows = np.empty(keys.shape[0], dtype=np.int64)
+        found = np.zeros(keys.shape[0], dtype=bool)
+        for i in range(keys.shape[0]):
+            q = keys[i, : gensort.KEY_BYTES].tobytes()
+            r = self._bound(q, int(preds[i]), "left")
+            rows[i] = r
+            found[i] = r < self.n and self._key_at(r) == q
+        return rows, found
+
+    def range_bounds(self, lo_key: bytes, hi_key: bytes) -> tuple[int, int]:
+        """Row span [start, stop) of keys in the inclusive range
+        ``[lo_key, hi_key]``."""
+        preds = self.predict_positions(
+            np.stack([self._as_batch(lo_key)[0], self._as_batch(hi_key)[0]])
+        )
+        start = self._bound(lo_key, int(preds[0]), "left")
+        stop = self._bound(hi_key, int(preds[1]), "right")
+        return start, max(stop, start)
+
+    def range_scan(self, lo_key: bytes, hi_key: bytes) -> np.ndarray:
+        """All records with ``lo_key <= key <= hi_key`` (mmap-backed view)."""
+        start, stop = self.range_bounds(lo_key, hi_key)
+        return self.records[start:stop]

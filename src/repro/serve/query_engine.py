@@ -1,0 +1,173 @@
+"""Batched query execution over a :class:`repro.serve.index.SortedFileIndex`.
+
+This is the serving analogue of the sort runtime (DESIGN.md §7): where
+``core/pipeline.py`` stages Sample→Train→Partition→Sort→Write, the query
+engine stages
+
+    predict  — one vectorized RMI position prediction per key batch
+               (NumPy f64 by default; the fused Pallas path via
+               ``kernels/ops.rmi_predict_pos`` with ``use_kernels=True``),
+    search   — per-key bounded last-mile binary search in the error band
+               (partition-boundary fallback on a provable miss),
+    scan     — range materialization, fanned out over a bounded worker
+               pool so concurrent scans overlap their page-cache misses.
+
+``QueryStats`` mirrors ``SortStats``: per-phase busy seconds, end-to-end
+wall seconds, and per-query latency percentiles / throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.data import gensort
+from repro.serve.index import SortedFileIndex
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Instrumentation for one query workload (the serving ``SortStats``)."""
+
+    n_point: int = 0
+    n_range: int = 0
+    n_hits: int = 0
+    records_scanned: int = 0
+    band_hits: int = 0
+    fallbacks: int = 0
+    phase_seconds: dict = dataclasses.field(default_factory=dict)
+    latencies_s: list = dataclasses.field(default_factory=list)
+    wall_seconds: float = 0.0
+
+    @property
+    def n_queries(self) -> int:
+        return self.n_point + self.n_range
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.phase_seconds.values())
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / max(self.wall_seconds, 1e-9)
+
+    def latency_ms(self, pct: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), pct)) * 1e3
+
+    def summary(self) -> str:
+        return (
+            f"{self.n_queries} queries ({self.n_point} point / "
+            f"{self.n_range} range) in {self.wall_seconds:.3f}s = "
+            f"{self.qps:.0f} q/s; p50 {self.latency_ms(50):.3f}ms "
+            f"p99 {self.latency_ms(99):.3f}ms; hits {self.n_hits}, "
+            f"band hits {self.band_hits}, fallbacks {self.fallbacks}, "
+            f"{self.records_scanned} records scanned"
+        )
+
+
+class QueryEngine:
+    """Point/range query execution with batching + a bounded scan pool."""
+
+    def __init__(
+        self,
+        index: SortedFileIndex,
+        *,
+        n_workers: int = 4,
+        use_kernels: bool = False,
+    ):
+        self.index = index
+        self.use_kernels = use_kernels
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(1, n_workers), thread_name_prefix="elsar-scan"
+        )
+        self.stats = QueryStats()
+        self._lock = threading.Lock()  # scan workers update stats too
+        # the index may be shared across engines: report per-engine deltas
+        self._band_hits0 = index.band_hits
+        self._fallbacks0 = index.fallbacks
+        self._t0 = time.perf_counter()
+
+    # -- lifecycle -----------------------------------------------------
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+        self._finish()
+
+    def __enter__(self) -> "QueryEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _finish(self) -> None:
+        self.stats.wall_seconds = time.perf_counter() - self._t0
+        self.stats.band_hits = self.index.band_hits - self._band_hits0
+        self.stats.fallbacks = self.index.fallbacks - self._fallbacks0
+
+    def _phase(self, name: str, dt: float) -> None:
+        with self._lock:
+            self.stats.phase_seconds[name] = (
+                self.stats.phase_seconds.get(name, 0.0) + dt
+            )
+
+    # -- point lookups -------------------------------------------------
+
+    def point(
+        self, keys: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched point lookup: (B, K) u8 keys -> (records, rows, found).
+
+        ``records`` is the (B, 100) array of first-match records (zeros
+        where ``found`` is False).
+        """
+        b = keys.shape[0]
+        t0 = time.perf_counter()
+        preds = self.index.predict_positions(keys, use_kernels=self.use_kernels)
+        t1 = time.perf_counter()
+        rows = np.empty(b, dtype=np.int64)
+        found = np.zeros(b, dtype=bool)
+        for i in range(b):
+            q = keys[i, : gensort.KEY_BYTES].tobytes()
+            r = self.index._bound(q, int(preds[i]), "left")
+            rows[i] = r
+            found[i] = r < self.index.n and self.index._key_at(r) == q
+        t2 = time.perf_counter()
+        out = np.zeros((b, self.index.records.shape[1]), dtype=np.uint8)
+        if found.any():
+            out[found] = self.index.records[rows[found]]
+        self._phase("predict", t1 - t0)
+        self._phase("search", t2 - t1)
+        self.stats.n_point += b
+        self.stats.n_hits += int(found.sum())
+        self.stats.latencies_s.extend([(t2 - t0) / b] * b)
+        return out, rows, found
+
+    # -- range scans ---------------------------------------------------
+
+    def _scan_one(self, lo_key: bytes, hi_key: bytes) -> np.ndarray:
+        t0 = time.perf_counter()
+        out = np.array(self.index.range_scan(lo_key, hi_key))
+        dt = time.perf_counter() - t0
+        self._phase("scan", dt)
+        with self._lock:
+            self.stats.latencies_s.append(dt)
+            self.stats.records_scanned += out.shape[0]
+        return out
+
+    def range(
+        self, ranges: "list[tuple[bytes, bytes]]"
+    ) -> "list[np.ndarray]":
+        """Concurrent inclusive range scans through the bounded pool."""
+        futures = [
+            self._pool.submit(self._scan_one, lo, hi) for lo, hi in ranges
+        ]
+        out = [f.result() for f in futures]
+        self.stats.n_range += len(ranges)
+        self.stats.n_hits += sum(1 for r in out if r.shape[0])
+        return out

@@ -15,6 +15,7 @@ import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import distributed, rmi, encoding
 from repro.data import gensort
+from repro.launch.mesh import make_mesh
 
 failures = []
 for skew in (False, True):
@@ -23,7 +24,7 @@ for skew in (False, True):
     hi, lo = encoding.encode_np(recs[:, :10])
     sample = recs[np.random.default_rng(1).choice(N, 2048, replace=False), :10]
     model = rmi.fit(sample, n_leaf=2048)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     fn = distributed.make_sort_fn(mesh, ("data",), model, n_per_device=N // 8,
                                   capacity_factor=1.5, use_kernels=False)
     sh = NamedSharding(mesh, P("data"))

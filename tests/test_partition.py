@@ -2,10 +2,8 @@
 
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, st
 
 from repro.core import partition
 

@@ -3,10 +3,8 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, st
 
 from repro.core import encoding, learned_sort, rmi, validate
 from repro.data import gensort, pipeline

@@ -1,0 +1,163 @@
+"""Learned-index query serving (DESIGN.md §7): point + range queries over
+sorted gensort output must exactly match a numpy linear-scan reference —
+uniform and skewed, batch sizes {1, 64}, manifest reloaded from disk, and
+with the error band disabled to force the partition-boundary fallback."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import external, manifest as manifest_lib
+from repro.data import gensort
+from repro.serve.index import SortedFileIndex
+from repro.serve.query_engine import QueryEngine
+
+N = 100_000
+
+
+class _Case:
+    """One sorted file + its linear-scan reference state."""
+
+    def __init__(self, tmp, skewed):
+        inp = os.path.join(tmp, "in.bin")
+        self.out = os.path.join(tmp, "out.bin")
+        gensort.write_file(inp, N, skewed=skewed)
+        self.stats = external.sort_file(
+            inp, self.out, memory_budget_bytes=16 << 20, n_readers=2,
+            manifest=True,
+        )
+        self.recs = gensort.read_records(self.out, mmap=False)
+        self.keys = np.ascontiguousarray(self.recs[:, :10]).view(
+            [("k", "S10")]
+        )["k"].reshape(-1)
+        rng = np.random.default_rng(3)
+        present = self.recs[rng.choice(N, 300, replace=False), :10]
+        absent = gensort.uniform_keys(100, seed=1234)
+        self.queries = np.concatenate([present, absent])
+        rng.shuffle(self.queries, axis=0)
+        self.ranges = []
+        for _ in range(20):
+            a, b = np.sort(rng.choice(N, 2, replace=False))
+            self.ranges.append(
+                (self.keys[a].tobytes(), self.keys[b].tobytes())
+            )
+        # a range with absent endpoints + an empty range
+        self.ranges.append((b"\x20" * 10, b"\x7e" * 10))
+        self.ranges.append((b"~~~~~~~~~~", b"~~~~~~~~~~"))
+
+    def ref_point(self, q: bytes):
+        mask = self.keys == q
+        return (int(mask.argmax()), True) if mask.any() else (None, False)
+
+    def ref_range(self, lo: bytes, hi: bytes):
+        return self.recs[(self.keys >= lo) & (self.keys <= hi)]
+
+
+@pytest.fixture(scope="module", params=[False, True], ids=["uniform", "skewed"])
+def case(request, tmp_path_factory):
+    return _Case(str(tmp_path_factory.mktemp("query")), request.param)
+
+
+def _check_engine(case, index, batch):
+    with QueryEngine(index, n_workers=2) as eng:
+        q = case.queries
+        for i in range(0, q.shape[0], batch):
+            chunk = q[i : i + batch]
+            recs, rows, found = eng.point(chunk)
+            for k in range(chunk.shape[0]):
+                ref_row, ref_found = case.ref_point(chunk[k].tobytes())
+                assert bool(found[k]) == ref_found
+                if ref_found:
+                    assert int(rows[k]) == ref_row  # first occurrence
+                    np.testing.assert_array_equal(recs[k], case.recs[ref_row])
+        results = eng.range(case.ranges)
+        for (lo, hi), got in zip(case.ranges, results):
+            np.testing.assert_array_equal(got, case.ref_range(lo, hi))
+    assert eng.stats.n_point == case.queries.shape[0]
+    assert eng.stats.n_range == len(case.ranges)
+    assert eng.stats.wall_seconds > 0 and eng.stats.qps > 0
+
+
+@pytest.mark.parametrize("batch", [1, 64])
+def test_point_and_range_match_linear_scan(case, batch):
+    index = SortedFileIndex.open(case.out)  # manifest reloaded from disk
+    _check_engine(case, index, batch)
+
+
+def test_forced_partition_boundary_fallback(case):
+    """err band = 0 makes every banded search provably miss; results must
+    still be exact via boundary-key + mmap-probe bisection."""
+    m = manifest_lib.load(manifest_lib.manifest_path(case.out))
+    m = dataclasses.replace(m, err_lo=0, err_hi=0)
+    index = SortedFileIndex(case.out, m)
+    rows, found = index.lookup(case.queries[:64])
+    for k in range(64):
+        ref_row, ref_found = case.ref_point(case.queries[k].tobytes())
+        assert bool(found[k]) == ref_found
+        if ref_found:
+            assert int(rows[k]) == ref_row
+    for lo, hi in case.ranges[:5]:
+        np.testing.assert_array_equal(
+            index.range_scan(lo, hi), case.ref_range(lo, hi)
+        )
+    assert index.fallbacks > 0
+
+
+def test_manifest_roundtrip_and_version_policy(case, tmp_path):
+    mpath = manifest_lib.manifest_path(case.out)
+    assert case.stats.manifest_path == mpath
+    m = manifest_lib.load(mpath)
+    assert m.version == manifest_lib.MANIFEST_VERSION
+    assert m.n_records == N
+    assert int(m.part_counts.sum()) == N
+    starts = m.part_starts()
+    assert starts[0] == 0 and starts[-1] == N
+    # boundary keys are monotone and match the file
+    bounds = np.ascontiguousarray(m.boundary_keys).view([("k", "S10")])["k"]
+    assert (bounds[:-1] <= bounds[1:]).all()
+    for j in range(m.n_partitions):
+        if m.part_counts[j]:
+            assert bytes(m.boundary_keys[j]) == case.keys[starts[j]].tobytes()
+    # save/load roundtrip preserves the model bit-exactly
+    p2 = str(tmp_path / "copy.npz")
+    manifest_lib.save(m, p2)
+    m2 = manifest_lib.load(p2)
+    np.testing.assert_array_equal(
+        np.asarray(m.model.leaf_slope), np.asarray(m2.model.leaf_slope)
+    )
+    assert (m2.err_lo, m2.err_hi) == (m.err_lo, m.err_hi)
+    # version mismatch is refused (format policy: single integer, bumped
+    # on incompatible change; manifests are derived data)
+    bad = str(tmp_path / "bad.npz")
+    with np.load(mpath) as z:
+        payload = {k: z[k] for k in z.files}
+    payload["version"] = np.int64(manifest_lib.MANIFEST_VERSION + 1)
+    with open(bad, "wb") as fh:
+        np.savez(fh, **payload)
+    with pytest.raises(ValueError, match="format version"):
+        manifest_lib.load(bad)
+
+
+def test_stale_sidecar_detected(case, tmp_path):
+    """A manifest whose record count disagrees with the file is refused."""
+    m = manifest_lib.load(manifest_lib.manifest_path(case.out))
+    stale = dataclasses.replace(m, n_records=N - 1)
+    with pytest.raises(ValueError, match="stale"):
+        SortedFileIndex(case.out, stale)
+
+
+def test_kernel_predict_matches_np(case):
+    """kernels/ops.rmi_predict_pos == the NumPy predictor (f32-exact at
+    this n), and the engine produces identical results through it."""
+    index = SortedFileIndex.open(case.out)
+    keys = case.queries[:128]
+    a = index.predict_positions(keys, use_kernels=False)
+    b = index.predict_positions(keys, use_kernels=True)
+    # f64 vs f32 CDF: identical up to one row at band edges
+    assert np.abs(a - b).max() <= 1
+    rows_np, found_np = index.lookup(keys, use_kernels=False)
+    rows_k, found_k = index.lookup(keys, use_kernels=True)
+    np.testing.assert_array_equal(rows_np, rows_k)
+    np.testing.assert_array_equal(found_np, found_k)

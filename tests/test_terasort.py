@@ -13,6 +13,7 @@ import tempfile
 import numpy as np, jax
 from repro.core import terasort, validate
 from repro.data import gensort
+from repro.launch.mesh import make_mesh
 
 tmp = tempfile.mkdtemp()
 for skew in (False, True):
@@ -21,7 +22,7 @@ for skew in (False, True):
     N = 200_000
     gensort.write_file(inp, N, skewed=skew)
     chk = validate.checksum(gensort.read_records(inp, mmap=False))
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     stats = terasort.sort_file_distributed(
         inp, out, mesh, chunk_records=1 << 15
     )

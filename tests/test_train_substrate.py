@@ -110,8 +110,9 @@ def test_checkpoint_uncommitted_ignored(tmp_path):
 
 def test_checkpoint_elastic_reshard(tmp_path):
     """Save unsharded, restore with an explicit (trivial) sharding."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     tree = {"w": jnp.arange(8, dtype=jnp.float32)}
