@@ -1,9 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV lines (+ roofline lines when the
-dry-run artifacts exist)."""
+dry-run artifacts exist).
+
+``--format {fixed,line,all}`` (or ``REPRO_BENCH_FORMAT``) selects the
+record-layout axis: ``fixed`` runs the historical gensort figures,
+``line`` the variable-length newline-corpus rates (DESIGN.md §8), ``all``
+both."""
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
@@ -12,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
+def main(argv: "list[str] | None" = None) -> None:
     from benchmarks import (
         io_stats,
         joulesort,
@@ -23,20 +29,40 @@ def main() -> None:
         sort_rates,
     )
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--format",
+        choices=("fixed", "line", "all"),
+        default=os.environ.get("REPRO_BENCH_FORMAT", "fixed"),
+        help="record-layout axis (default: fixed gensort figures)",
+    )
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    if args.format not in ("fixed", "line", "all"):
+        # argparse does not validate defaults, so a typo'd
+        # REPRO_BENCH_FORMAT must fail loudly, not select zero suites
+        ap.error(f"invalid REPRO_BENCH_FORMAT {args.format!r}")
+
     n = int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000))
     # explicit argv/args: the harness's own sys.argv must never leak into a
     # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that
     # takes a record count (Fig. 4's sizes are structural: budget multiples)
-    suites = [
-        ("fig2_sort_rates", lambda: sort_rates.main(n)),
-        ("s33_fig3_partition_variance", lambda: partition_variance.main(n)),
-        ("fig4_scalability", lambda: scalability.main([])),
-        ("fig5_joulesort", lambda: joulesort.main(n)),
-        ("fig6_phase_breakdown", lambda: phase_breakdown.main(
-            ["--records", str(n)])),
-        ("fig7_io_stats", lambda: io_stats.main(n)),
-        ("serve_query_rates", lambda: query_rates.main(n)),
-    ]
+    suites = []
+    if args.format in ("fixed", "all"):
+        suites += [
+            ("fig2_sort_rates", lambda: sort_rates.main(n)),
+            ("s33_fig3_partition_variance",
+             lambda: partition_variance.main(n)),
+            ("fig4_scalability", lambda: scalability.main([])),
+            ("fig5_joulesort", lambda: joulesort.main(n)),
+            ("fig6_phase_breakdown", lambda: phase_breakdown.main(
+                ["--records", str(n)])),
+            ("fig7_io_stats", lambda: io_stats.main(n)),
+            ("serve_query_rates", lambda: query_rates.main(n)),
+        ]
+    if args.format in ("line", "all"):
+        suites += [
+            ("line_sort_rates", lambda: sort_rates.main_line(n)),
+        ]
     failures = 0
     for name, fn in suites:
         try:

@@ -40,5 +40,49 @@ def main(n_records: int = 1_000_000):
         )
 
 
+def run_line(n_records: int, budget=64 << 20) -> list[dict]:
+    """Sorting rates on variable-length newline corpora (the GNU-sort
+    workload; ``--format line`` axis of benchmarks/run.py)."""
+    import os
+
+    from repro.core.format import LineFormat
+    from repro.data import lines
+
+    fmt = LineFormat(max_key_bytes=16)
+    rows = []
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    for kind in ("uniform", "skewed"):
+        path = os.path.join(common.CACHE_DIR, f"lines_{kind}_{n_records}.txt")
+        if not os.path.exists(path):
+            lines.write_lines(path, n_records, kind=kind, seed=0)
+        refsum = validate.checksum_block(fmt.read_block(path))
+        for n_readers in (1, 2):
+            with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+                stats = external.sort_file(
+                    path, out.name, memory_budget_bytes=budget, fmt=fmt,
+                    n_readers=n_readers,
+                )
+                res = validate.validate_file(
+                    out.name, refsum, stats.n_records, fmt=fmt
+                )
+                assert res["ok"], (kind, n_readers, res)
+                rows.append({
+                    "dist": kind,
+                    "n_readers": n_readers,
+                    "rate_mb_s": stats.rate_mb_s(),
+                    "seconds": stats.wall_seconds or stats.total_seconds,
+                })
+    return rows
+
+
+def main_line(n_records: int = 1_000_000):
+    for r in run_line(n_records):
+        common.emit(
+            f"line_sort_rate_{r['dist']}_r{r['n_readers']}",
+            r["seconds"] * 1e6,
+            f"rate={r['rate_mb_s']:.1f}MB/s",
+        )
+
+
 if __name__ == "__main__":
     main()

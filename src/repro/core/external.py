@@ -66,6 +66,8 @@ def sort_file(
     n_readers: int = 1,
     n_sorters: int = 1,
     manifest: bool = False,
+    fmt=None,
+    flush_bytes: int = 1 << 20,
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
 
@@ -73,6 +75,12 @@ def sort_file(
     threads in the partition phase.  Output is byte-identical for every
     reader count; > 1 additionally overlaps the partition/sort/write
     phases (visible as ``stats.overlap_seconds > 0``).
+
+    ``fmt`` selects the record layout (``repro.core.format``, DESIGN.md
+    §8): ``None`` keeps the historical gensort layout
+    (``FixedFormat(100, 10)``); ``LineFormat(max_key_bytes=...)`` sorts
+    variable-length newline-delimited text in stable memcmp order of the
+    zero-padded key window.
 
     ``manifest=True`` additionally emits ``<output>.manifest.npz`` — the
     trained model + partition map + error band that turns the sorted file
@@ -92,5 +100,7 @@ def sort_file(
         use_kernels=use_kernels,
         device_sort=device_sort,
         emit_manifest=manifest,
+        fmt=fmt,
+        flush_bytes=flush_bytes,
     )
     return run_pipeline(input_path, output_path, cfg)

@@ -1,4 +1,4 @@
-"""Sidecar manifest over sorted ELSAR output (DESIGN.md §7).
+"""Sidecar manifest over sorted ELSAR output (DESIGN.md §7, §8).
 
 The learned CDF model does double duty: it partitions the input for
 sorting, and — because the output is a concatenation of monotone,
@@ -7,9 +7,15 @@ file.  The manifest persists everything query serving needs next to the
 output file (``<output>.manifest.npz``):
 
 * the trained :class:`repro.core.rmi.RMIParams` (a few KB of arrays),
+* the **record format** (``repro.core.format``) the file was sorted
+  under — layout kind plus its parameters,
 * per-partition record counts (byte offsets are derived),
 * partition boundary keys — the first key of each partition, with empty
   partitions back-filled so the array stays monotone,
+* for variable-length (line) output, the **offsets sidecar**: the
+  ``(n + 1,)`` int64 record-start offsets into the sorted file, which is
+  what lets serving address record *i* without rescanning for
+  delimiters,
 * a measured prediction **error band** ``(err_lo, err_hi)``: the largest
   observed under/overshoot (in records) of ``floor(F(key) * n)`` against
   the key's true position, measured on a stride sample of the sorted
@@ -18,9 +24,12 @@ output file (``<output>.manifest.npz``):
   misses, so an underestimated band costs latency, never correctness.
 
 Format version policy: ``MANIFEST_VERSION`` is a single integer bumped on
-any incompatible layout change; ``load`` refuses mismatched versions
-(re-sort or re-emit with ``build``/``save`` to upgrade — manifests are
-derived data, never the source of truth).
+any incompatible layout change.  ``load`` reads the current version and
+the v1 layout (v1 manifests predate the record-format layer and are by
+definition fixed gensort 100/10 — they load with that format and no
+offsets sidecar); any other version is refused (re-sort or re-emit with
+``build``/``save`` to upgrade — manifests are derived data, never the
+source of truth).
 """
 
 from __future__ import annotations
@@ -31,9 +40,11 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import encoding, rmi
-from repro.data import gensort
+from repro.core import format as format_lib
 
-MANIFEST_VERSION = 1
+MANIFEST_VERSION = 2
+# versions load() understands: current + the pre-format-layer layout
+_READABLE_VERSIONS = (1, 2)
 
 # error-band slack on top of the sampled max error: absorbs duplicates
 # whose leftmost occurrence sits before the sampled one, and f32 rounding
@@ -51,10 +62,14 @@ class SortManifest:
     version: int
     n_records: int
     part_counts: np.ndarray  # (P,) int64 records per partition
-    boundary_keys: np.ndarray  # (P, KEY_BYTES) uint8 first key per partition
+    boundary_keys: np.ndarray  # (P, key_width) uint8 first key per partition
     err_lo: int  # max observed (pred - true) overshoot, in records
     err_hi: int  # max observed (true - pred) undershoot, in records
     model: rmi.RMIParams
+    # record layout of the sorted file (v1 manifests: gensort 100/10)
+    fmt: "format_lib.FixedFormat | format_lib.LineFormat" = format_lib.GENSORT
+    # (n + 1,) record-start byte offsets for variable-length output
+    line_offsets: np.ndarray | None = None
 
     @property
     def n_partitions(self) -> int:
@@ -68,7 +83,11 @@ class SortManifest:
 
     def part_byte_offsets(self) -> np.ndarray:
         """(P + 1,) byte offset of each partition in the sorted file."""
-        return self.part_starts() * gensort.RECORD_BYTES
+        if self.fmt.kind == "line":
+            return np.asarray(self.line_offsets, dtype=np.int64)[
+                self.part_starts()
+            ]
+        return self.part_starts() * self.fmt.record_bytes
 
 
 def build(
@@ -76,25 +95,28 @@ def build(
     part_counts: "list[int] | np.ndarray",
     sorted_path: str,
     *,
+    fmt=None,
     max_scan: int = 1 << 20,
 ) -> SortManifest:
     """Measure boundaries + error band over a freshly sorted file.
 
     One mostly-sequential pass over at most ``max_scan`` stride-sampled
-    records (exact scan when the file is smaller).
+    records (exact scan when the file is smaller).  For line formats this
+    pass also materializes the offsets sidecar.
     """
-    recs = gensort.read_records(sorted_path)
-    n = recs.shape[0]
+    fmt = fmt if fmt is not None else format_lib.GENSORT
+    block = fmt.read_block(sorted_path)
+    n = block.n_records
     counts = np.asarray(part_counts, dtype=np.int64)
     starts = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
 
     # boundary key = first key of the partition; empty partitions inherit
     # the next non-empty one (monotone), trailing empties sort after all
     p = counts.shape[0]
-    boundaries = np.full((p, gensort.KEY_BYTES), 0xFF, dtype=np.uint8)
+    boundaries = np.full((p, fmt.key_width), 0xFF, dtype=np.uint8)
     nonempty = counts > 0
     if nonempty.any():
-        boundaries[nonempty] = recs[starts[nonempty], : gensort.KEY_BYTES]
+        boundaries[nonempty] = block.keys[starts[nonempty]]
         for j in range(p - 2, -1, -1):
             if not nonempty[j] and starts[j] < n:
                 boundaries[j] = boundaries[j + 1]
@@ -103,7 +125,7 @@ def build(
     if n:
         stride = max(1, -(-n // max_scan))
         pos = np.arange(0, n, stride, dtype=np.int64)
-        hi, lo = encoding.encode_np(recs[pos, : gensort.KEY_BYTES])
+        hi, lo = encoding.encode_np(block.keys[pos])
         cdf = rmi.predict_cdf_np(model, hi, lo)
         pred = np.clip((cdf.astype(np.float64) * n).astype(np.int64), 0, n - 1)
         delta = pred - pos
@@ -118,6 +140,12 @@ def build(
         err_lo=err_lo,
         err_hi=err_hi,
         model=model,
+        fmt=fmt,
+        line_offsets=(
+            np.asarray(block.offsets, dtype=np.int64)
+            if fmt.kind == "line"
+            else None
+        ),
     )
 
 
@@ -131,6 +159,9 @@ def save(m: SortManifest, path: str) -> None:
         "err_lo": np.int64(m.err_lo),
         "err_hi": np.int64(m.err_hi),
     }
+    payload.update(m.fmt.manifest_fields())
+    if m.line_offsets is not None:
+        payload["line_offsets"] = np.asarray(m.line_offsets, dtype=np.int64)
     for f in dataclasses.fields(rmi.RMIParams):
         payload["rmi_" + f.name] = np.asarray(getattr(m.model, f.name))
     with open(path, "wb") as fh:
@@ -140,12 +171,18 @@ def save(m: SortManifest, path: str) -> None:
 def load(path: str) -> SortManifest:
     with np.load(path) as z:
         version = int(z["version"])
-        if version != MANIFEST_VERSION:
+        if version not in _READABLE_VERSIONS:
             raise ValueError(
                 f"manifest {path!r} has format version {version}, this "
-                f"build reads {MANIFEST_VERSION}; re-emit the manifest "
+                f"build reads {_READABLE_VERSIONS}; re-emit the manifest "
                 f"(manifests are derived data — re-sort or rebuild)"
             )
+        # v1 predates the record-format layer: always gensort 100/10
+        fmt = (
+            format_lib.GENSORT
+            if version == 1
+            else format_lib.from_manifest_fields(z)
+        )
         model = rmi.RMIParams(
             **{
                 f.name: jnp.asarray(z["rmi_" + f.name])
@@ -160,4 +197,10 @@ def load(path: str) -> SortManifest:
             err_lo=int(z["err_lo"]),
             err_hi=int(z["err_hi"]),
             model=model,
+            fmt=fmt,
+            line_offsets=(
+                z["line_offsets"].astype(np.int64)
+                if "line_offsets" in z.files
+                else None
+            ),
         )

@@ -53,8 +53,8 @@ import time
 import numpy as np
 
 from repro.core import rmi
+from repro.core.format import GENSORT, RecordBlock
 from repro.data import gensort
-from repro.data.pipeline import record_stripes, stripe_batches
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +75,7 @@ class SortStats:
     """
 
     n_records: int = 0
+    input_bytes: int = 0
     bytes_read: int = 0
     bytes_written: int = 0
     phase_seconds: dict = dataclasses.field(default_factory=dict)
@@ -104,7 +105,9 @@ class SortStats:
         return max(0.0, self.total_seconds - self.wall_seconds)
 
     def rate_mb_s(self) -> float:
-        total = self.n_records * gensort.RECORD_BYTES
+        # sequential baselines (mergesort/terasort) predate ``input_bytes``
+        # and keep the fixed-gensort accounting as a fallback
+        total = self.input_bytes or self.n_records * gensort.RECORD_BYTES
         elapsed = self.wall_seconds or self.total_seconds
         return total / max(elapsed, 1e-9) / 1e6
 
@@ -187,10 +190,13 @@ class PartitionSpill:
     """One partition's spill file: coalesced appends + a fragment index.
 
     Writers (readers of the input) append pre-coalesced fragment blobs
-    under a lock, each tagged ``(stripe, seq)``.  The loader side runs in a
-    single thread and may ``prefetch()`` committed fragments *while writers
-    are still appending* — segments are recorded only after their bytes hit
-    the file, so reading a recorded segment is always safe.  ``take()``
+    under a lock, each tagged ``(stripe, seq)``.  Blobs are opaque record
+    bytes — the caller supplies the record count, so the spill layer is
+    record-format-agnostic (fixed-stride and delimiter-terminated blobs
+    spill identically).  The loader side runs in a single thread and may
+    ``prefetch()`` committed fragments *while writers are still
+    appending* — segments are recorded only after their bytes hit the
+    file, so reading a recorded segment is always safe.  ``take()``
     finalizes: reads the rest, reorders fragments by (stripe, seq) into
     global input order, and deletes the file.
     """
@@ -205,15 +211,19 @@ class PartitionSpill:
         self._loaded: dict[int, bytes] = {}  # loader-thread-only
         self._read_fd = -1
 
+    @property
+    def n_bytes(self) -> int:
+        return self._pos
+
     # -- writer side (reader pool) ------------------------------------
-    def append(self, stripe: int, seq: int, blob: bytes) -> None:
+    def append(self, stripe: int, seq: int, blob: bytes, n_records: int) -> None:
         with self._lock:
             if self._f is None:
                 self._f = open(self.path, "wb", buffering=0)
             self._f.write(blob)
             self.segments.append((stripe, seq, self._pos, len(blob)))
             self._pos += len(blob)
-            self.n_records += len(blob) // gensort.RECORD_BYTES
+            self.n_records += n_records
 
     def close_writer(self) -> None:
         with self._lock:
@@ -237,13 +247,13 @@ class PartitionSpill:
             done += nbytes
         return done
 
-    def take(self) -> tuple[np.ndarray | None, int]:
-        """Finalize after ``close_writer``: returns (records, fresh_bytes).
+    def take(self) -> tuple[bytes | None, int]:
+        """Finalize after ``close_writer``: returns (blob, fresh_bytes).
 
-        Records come back in global input order (fragments sorted by
-        (stripe, seq)); the spill file is deleted.  ``fresh_bytes`` counts
-        only bytes read by *this* call, so prefetched bytes are never
-        double-counted.
+        The blob holds the partition's record bytes in global input order
+        (fragments sorted by (stripe, seq)); the spill file is deleted.
+        ``fresh_bytes`` counts only bytes read by *this* call, so
+        prefetched bytes are never double-counted.
         """
         fresh = self.prefetch()
         order = sorted(
@@ -258,10 +268,7 @@ class PartitionSpill:
             return None, fresh
         blob = b"".join(self._loaded[i] for i in order)
         self._loaded.clear()
-        recs = np.frombuffer(blob, dtype=np.uint8).reshape(
-            -1, gensort.RECORD_BYTES
-        )
-        return recs, fresh
+        return blob, fresh
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +295,8 @@ class SortPipelineConfig:
     queue_depth: int = 2  # bound on each inter-stage queue
     # emit <output>.manifest.npz for query serving (serve/index.py)
     emit_manifest: bool = False
+    # record layout (core/format.py); None -> the gensort 100/10 layout
+    fmt: "object | None" = None
 
 
 class _Abort(Exception):
@@ -318,36 +327,6 @@ def _get(q: queue.Queue, abort: threading.Event):
 # ---------------------------------------------------------------------------
 
 
-def _sample_stage(path: str, n_records: int, sample_frac: float) -> np.ndarray:
-    """Uniform key sample, capped at 10M (paper §3.1/§6).
-
-    The paper samples from "the first batch read by thread T0" — but its r
-    reader threads each own a different stripe of the file, so the union of
-    first batches spans the whole input.  We emulate that with contiguous
-    runs from 64 evenly-spaced file offsets (mostly-sequential I/O).  The
-    sample is independent of ``n_readers``, so every reader count trains
-    the identical model and produces identical partitions.
-    """
-    n_stripes = 64
-    take = min(
-        max(int(n_records * sample_frac), 1024), 10_000_000, n_records
-    )
-    recs = gensort.read_records(path)
-    per_stripe = max(take // n_stripes, 16)
-    rng = np.random.default_rng(0)
-    keys = []
-    for s in range(n_stripes):
-        start = int(s * n_records / n_stripes)
-        run = np.array(
-            recs[start : min(start + per_stripe, n_records), : gensort.KEY_BYTES]
-        )
-        keys.append(run)
-    out = np.concatenate(keys)
-    if out.shape[0] > take:
-        out = out[rng.choice(out.shape[0], take, replace=False)]
-    return out
-
-
 def _train_stage(sample: np.ndarray, n_leaf: int) -> rmi.RMIParams:
     if n_leaf == 0:
         # plenty of leaves (production RMIs use 1e4-1e6): a skew spike
@@ -359,6 +338,7 @@ def _train_stage(sample: np.ndarray, n_leaf: int) -> rmi.RMIParams:
 def _reader_worker(
     clock: PhaseClock,
     model: rmi.RMIParams,
+    fmt,
     spills: list[PartitionSpill],
     n_partitions: int,
     stripe_q: "queue.SimpleQueue",
@@ -371,7 +351,9 @@ def _reader_worker(
 
     Buffers are flushed at ``flush_bytes`` and always at stripe end, so no
     fragment ever spans a stripe boundary — the (stripe, seq) tag stays a
-    total order over input positions.
+    total order over input positions.  The format supplies the blocks
+    (fixed strides, or delimiter-split lines) and the key-prefix matrix;
+    everything below the key extraction is layout-independent.
     """
     from repro.core import encoding
 
@@ -393,6 +375,7 @@ def _reader_worker(
                 # batch's memory is released as soon as the batch is routed
                 bufs: dict[int, list[bytes]] = {}
                 buf_bytes: dict[int, int] = {}
+                buf_recs: dict[int, int] = {}
                 seqs: dict[int, int] = {}
                 total = 0
 
@@ -400,27 +383,31 @@ def _reader_worker(
                     nonlocal total
                     blob = b"".join(bufs.pop(j))
                     total -= buf_bytes.pop(j)
-                    spills[j].append(stripe.index, seqs.get(j, 0), blob)
+                    spills[j].append(
+                        stripe.index, seqs.get(j, 0), blob, buf_recs.pop(j)
+                    )
                     seqs[j] = seqs.get(j, 0) + 1
                     clock.add_io(written=len(blob))
 
-                for _, batch in stripe_batches(
+                for block in fmt.iter_batches(
                     input_path, stripe, cfg.batch_records
                 ):
-                    clock.add_io(read=batch.nbytes)
-                    keys = batch[:, : gensort.KEY_BYTES]
-                    hi, lo = encoding.encode_np(keys)
+                    clock.add_io(read=block.n_bytes)
+                    hi, lo = encoding.encode_np(block.keys)
                     bucket = rmi.predict_bucket_np(model, hi, lo, n_partitions)
                     # stable group-by-bucket, then contiguous fragment slices
                     order = np.argsort(bucket, kind="stable")
-                    grouped = batch[order]
+                    grouped = block.take(order)
                     bcounts = np.bincount(bucket, minlength=n_partitions)
                     starts = np.concatenate([[0], np.cumsum(bcounts)[:-1]])
                     for j in np.nonzero(bcounts)[0]:
-                        frag = grouped[starts[j] : starts[j] + bcounts[j]]
-                        bufs.setdefault(j, []).append(frag.tobytes())
-                        buf_bytes[j] = buf_bytes.get(j, 0) + frag.nbytes
-                        total += frag.nbytes
+                        frag = grouped.slice_bytes(
+                            starts[j], starts[j] + bcounts[j]
+                        )
+                        bufs.setdefault(j, []).append(frag)
+                        buf_bytes[j] = buf_bytes.get(j, 0) + len(frag)
+                        buf_recs[j] = buf_recs.get(j, 0) + int(bcounts[j])
+                        total += len(frag)
                         if buf_bytes[j] >= cfg.flush_bytes:
                             flush(j)
                     while total >= reader_cap:
@@ -436,6 +423,7 @@ def _reader_worker(
 
 def _loader_worker(
     clock: PhaseClock,
+    fmt,
     spills: list[PartitionSpill],
     offsets_box: dict,
     partition_done: threading.Event,
@@ -448,7 +436,9 @@ def _loader_worker(
 
     While the partition phase is in flight, eagerly pre-reads fragments
     already committed for the next few partitions (bounded window); once
-    fragment sets are final, emits partitions in ascending key order.
+    fragment sets are final, parses each partition's blob back into a
+    RecordBlock (the format re-derives offsets/keys) and emits partitions
+    in ascending key order.
     """
     try:
         emit = 0
@@ -457,10 +447,13 @@ def _loader_worker(
         while emit < n_parts and not abort.is_set():
             if partition_done.is_set():
                 with clock.timer("sort_read"):
-                    recs, fresh = spills[emit].take()
+                    blob, fresh = spills[emit].take()
                     clock.add_io(read=fresh)
-                if recs is not None:
-                    _put(sort_q, (offsets_box["offsets"][emit], recs), abort)
+                    block = (
+                        fmt.parse_blob(blob) if blob is not None else None
+                    )
+                if block is not None:
+                    _put(sort_q, (offsets_box["offsets"][emit], block), abort)
                 emit += 1
             else:
                 progressed = 0
@@ -484,22 +477,27 @@ def _loader_worker(
 
 def _sort_partition(
     model: rmi.RMIParams,
-    part: np.ndarray,
+    block: RecordBlock,
     *,
     device_sort: bool,
     use_kernels: bool,
-) -> np.ndarray:
-    """Sort one partition's records (host LearnedSort or device path)."""
+) -> RecordBlock:
+    """Sort one partition's records (host LearnedSort or device path).
+
+    Only the key-prefix matrix is sorted; the permutation then gathers
+    the (possibly variable-length) record bodies in one ``take``.
+    """
     from repro.core import learned_sort
 
+    keys = np.ascontiguousarray(block.keys)
     if device_sort:
         import jax.numpy as jnp
 
-        from repro.core import encoding, validate
+        from repro.core import encoding
         from repro.core.encoding import SENTINEL
 
-        m = part.shape[0]
-        hi, lo = encoding.encode_np(part[:, : gensort.KEY_BYTES])
+        m = block.n_records
+        hi, lo = encoding.encode_np(keys)
         # pad to the next power of two so jit sees O(log) distinct
         # shapes across partitions, not one compile per partition
         m_pad = 1 << max(0, (m - 1)).bit_length()
@@ -511,16 +509,19 @@ def _sort_partition(
         )
         perm = np.asarray(perm)
         perm = perm[perm < m]  # drop sentinel padding
-        sorted_part = part[perm]
-        # touch-up beyond byte 8 (paper's strncmp step §4)
-        k = validate.keys_view(sorted_part)
-        if (k[:-1] > k[1:]).any():
-            sorted_part = sorted_part[np.argsort(k, kind="stable")]
-        return sorted_part
+        # touch-up beyond byte 8 (paper's strncmp step §4), over the full
+        # key window
+        k = keys[perm]
+        kv = np.ascontiguousarray(k).view(
+            [("k", f"S{k.shape[1]}")]
+        )["k"].reshape(-1)
+        if (kv[:-1] > kv[1:]).any():
+            perm = perm[np.argsort(kv, kind="stable")]
+        return block.take(perm)
     # host LearnedSort (bucket + radix place + touch-up): no per-partition
     # device dispatch — see learned_sort.sort_host
-    perm = learned_sort.sort_host(model, part[:, : gensort.KEY_BYTES])
-    return part[perm]
+    perm = learned_sort.sort_host(model, keys)
+    return block.take(perm)
 
 
 def _sorter_worker(
@@ -538,15 +539,15 @@ def _sorter_worker(
             if item is None:
                 _put(write_q, None, abort)
                 return
-            offset, part = item
+            offset, block = item
             with clock.timer("sort"):
-                sorted_part = _sort_partition(
+                sorted_block = _sort_partition(
                     model,
-                    part,
+                    block,
                     device_sort=cfg.device_sort,
                     use_kernels=cfg.use_kernels,
                 )
-            _put(write_q, (offset, sorted_part), abort)
+            _put(write_q, (offset, sorted_block), abort)
     except _Abort:
         pass
     except BaseException as e:  # surfaced by the orchestrator after joins
@@ -574,11 +575,11 @@ def _writer_worker(
                 if item is None:
                     remaining -= 1
                     continue
-                offset, sorted_part = item
+                offset, sorted_block = item
                 with clock.timer("write"):
                     out.seek(offset)
-                    out.write(sorted_part.tobytes())
-                    clock.add_io(written=sorted_part.nbytes)
+                    out.write(sorted_block.tobytes())
+                    clock.add_io(written=sorted_block.n_bytes)
         finally:
             out.close()
     except _Abort:
@@ -602,14 +603,23 @@ def run_pipeline(
             f"n_readers and n_sorters must be >= 1, got "
             f"{cfg.n_readers}/{cfg.n_sorters}"
         )
+    fmt = cfg.fmt if cfg.fmt is not None else GENSORT
     stats = SortStats()
     clock = PhaseClock()
     stats.n_readers = cfg.n_readers
     file_bytes = os.path.getsize(input_path)
-    n = file_bytes // gensort.RECORD_BYTES
-    stats.n_records = n
+    stats.input_bytes = file_bytes
+    # output size is format-defined (fixed: identical; lines: +1 when the
+    # final line needs its normalization delimiter).  Raises early on a
+    # malformed fixed file (size not a record multiple).
+    out_bytes = fmt.output_bytes(input_path)
+    if fmt.kind == "fixed":
+        n_est = file_bytes // fmt.record_bytes
+    else:
+        n_est = fmt.estimate_n_records(input_path)
+    stats.n_records = n_est  # exact count lands after the partition phase
 
-    if n == 0:  # nothing to sort; still produce the (empty) output
+    if out_bytes == 0:  # nothing to sort; still produce the (empty) output
         with clock.timer("setup"):
             open(output_path, "wb").close()
         clock.finish(stats)
@@ -624,12 +634,12 @@ def run_pipeline(
     # --- Alg. 1 line 1: preallocate output (sparse on ext4/xfs)
     with clock.timer("setup"):
         with open(output_path, "wb") as f:
-            f.truncate(file_bytes)
+            f.truncate(out_bytes)
 
     # --- Sample + Train stages (Alg. 1 line 2)
     with clock.timer("train"):
-        sample = _sample_stage(input_path, n, cfg.sample_frac)
-        clock.add_io(read=sample.shape[0] * gensort.KEY_BYTES)
+        sample = fmt.sample_keys(input_path, n_est, cfg.sample_frac)
+        clock.add_io(read=sample.shape[0] * fmt.key_width)
         model = _train_stage(sample, cfg.n_leaf)
 
     # --- Partition / Sort / Write stages, queue-connected
@@ -639,7 +649,9 @@ def run_pipeline(
         for j in range(n_partitions)
     ]
     stripe_q: queue.SimpleQueue = queue.SimpleQueue()
-    for stripe in record_stripes(n, cfg.n_readers * cfg.stripes_per_reader):
+    for stripe in fmt.file_stripes(
+        input_path, cfg.n_readers * cfg.stripes_per_reader
+    ):
         stripe_q.put(stripe)
     sort_q: queue.Queue = queue.Queue(maxsize=cfg.queue_depth)
     write_q: queue.Queue = queue.Queue(maxsize=cfg.queue_depth)
@@ -651,8 +663,8 @@ def run_pipeline(
     readers = [
         threading.Thread(
             target=_reader_worker,
-            args=(clock, model, spills, n_partitions, stripe_q, input_path,
-                  cfg, abort, errors),
+            args=(clock, model, fmt, spills, n_partitions, stripe_q,
+                  input_path, cfg, abort, errors),
             name=f"elsar-reader-{i}",
             daemon=True,
         )
@@ -660,8 +672,8 @@ def run_pipeline(
     ]
     loader = threading.Thread(
         target=_loader_worker,
-        args=(clock, spills, offsets_box, partition_done, sort_q, cfg, abort,
-              errors),
+        args=(clock, fmt, spills, offsets_box, partition_done, sort_q, cfg,
+              abort, errors),
         name="elsar-loader",
         daemon=True,
     )
@@ -688,10 +700,22 @@ def run_pipeline(
     for spill in spills:
         spill.close_writer()
     counts = [spill.n_records for spill in spills]
+    sizes = [spill.n_bytes for spill in spills]
     stats.partition_counts = counts
-    offsets_box["offsets"] = (
-        np.concatenate([[0], np.cumsum(counts)[:-1]]) * gensort.RECORD_BYTES
-    )
+    stats.n_records = sum(counts)
+    # write offsets are byte-exact prefix sums of the spill sizes (for a
+    # fixed layout this is counts * record_bytes, as before)
+    offsets_box["offsets"] = np.concatenate(
+        [[0], np.cumsum(sizes, dtype=np.int64)[:-1]]
+    ).astype(np.int64)
+    if not abort.is_set() and sum(sizes) != out_bytes:
+        abort.set()
+        errors.append(
+            RuntimeError(
+                f"partitioned {sum(sizes)} bytes but expected {out_bytes} "
+                f"— record-boundary split bug (format {fmt.kind!r})"
+            )
+        )
     partition_done.set()
     for t in [loader, *sorters, writer]:
         t.join()
@@ -704,7 +728,7 @@ def run_pipeline(
         from repro.core import manifest as manifest_lib
 
         with clock.timer("manifest"):
-            m = manifest_lib.build(model, counts, output_path)
+            m = manifest_lib.build(model, counts, output_path, fmt=fmt)
             mpath = manifest_lib.manifest_path(output_path)
             manifest_lib.save(m, mpath)
             stats.manifest_path = mpath

@@ -93,8 +93,19 @@ def write_file(
 
 
 def read_records(path: str, mmap: bool = True) -> np.ndarray:
-    """Memory-mapped (n, 100) view of a record file."""
+    """Memory-mapped (n, 100) view of a record file.
+
+    Raises ``ValueError`` when the file size is not a whole number of
+    records — a truncated or mis-formatted file must never be silently
+    shortened (the dropped tail would look like a successful sort that
+    lost records).
+    """
     arr = np.memmap(path, dtype=np.uint8, mode="r")
-    n = arr.shape[0] // RECORD_BYTES
-    arr = arr[: n * RECORD_BYTES].reshape(n, RECORD_BYTES)
+    if arr.shape[0] % RECORD_BYTES:
+        raise ValueError(
+            f"{path!r} is {arr.shape[0]} bytes — not a multiple of the "
+            f"{RECORD_BYTES}-byte record size; refusing to drop the "
+            f"trailing {arr.shape[0] % RECORD_BYTES} bytes"
+        )
+    arr = arr.reshape(-1, RECORD_BYTES)
     return arr if mmap else np.array(arr)

@@ -1,0 +1,129 @@
+"""Line-corpus generators for the variable-length record format
+(core/format.LineFormat; DESIGN.md §8).
+
+The paper benchmarks against GNU coreutils ``sort`` on newline-delimited
+ASCII; these generators produce the corpus *shapes* the differential
+harness sweeps (tests/test_differential.py):
+
+* ``uniform``     — i.i.d. printable lines, lengths uniform in
+  ``[min_len, max_len]``,
+* ``skewed``      — gensort ``-s``-style: the first 6 content bytes are
+  replaced by a log2-indexed table entry, producing heavy prefix
+  duplication (the "spikes" histogram of paper Fig. 3),
+* ``dups``        — duplicate-heavy: every line drawn from a small vocab,
+  so full-line duplicates dominate and tie-stability is load-bearing,
+* ``short``       — lines shorter than any realistic key window (0-6
+  content bytes), exercising the zero-padded short-key encoding path,
+* ``empty``       — ~30% zero-length lines (bare delimiters) mixed with
+  uniform lines.
+
+All generation is vectorized (no per-line Python loop) and a pure
+function of ``(kind, n, seed)``; ``write_lines`` streams chunks so
+corpora larger than memory are fine, and ``terminate_last=False`` drops
+the final newline to exercise the normalization path (GNU sort appends
+one; so does LineFormat).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.gensort import ASCII_HI, ASCII_LO, SKEW_TABLE_SIZE, skew_table
+
+KINDS = ("uniform", "skewed", "dups", "short", "empty")
+
+_DELIM = 10  # b"\n"; the printable range [32, 126] never collides
+_VOCAB = 64  # distinct lines in the duplicate-heavy corpus
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def _assemble(lengths: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Pack ``n`` lines of the given *content* lengths (delimiter added)
+    into one uint8 buffer of random printable content."""
+    lengths = lengths.astype(np.int64)
+    ends = np.cumsum(lengths + 1)
+    data = rng.integers(
+        ASCII_LO, ASCII_HI + 1, size=int(ends[-1]), dtype=np.uint8
+    )
+    data[ends - 1] = _DELIM
+    return data
+
+
+def make_lines(
+    n: int,
+    kind: str = "uniform",
+    seed: int = 0,
+    start_idx: int = 0,
+    min_len: int = 1,
+    max_len: int = 32,
+) -> np.ndarray:
+    """One corpus chunk as a uint8 buffer of ``n`` delimiter-terminated
+    lines.  ``start_idx`` keeps the skew schedule global across chunks."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown line-corpus kind {kind!r}; one of {KINDS}")
+    rng = _rng(seed)
+    if kind == "dups":
+        vocab_len = _rng(seed ^ 0x5EED).integers(
+            min_len, max_len + 1, size=_VOCAB
+        )
+        vocab = [
+            _assemble(vocab_len[v : v + 1], _rng((seed << 8) ^ v))
+            for v in range(_VOCAB)
+        ]
+        # zipf-ish pick: squaring the uniform skews mass onto low ids
+        pick = (rng.random(n) ** 2 * _VOCAB).astype(np.int64)
+        return np.concatenate([vocab[v] for v in pick]) if n else np.empty(
+            0, np.uint8
+        )
+    if kind == "short":
+        lengths = rng.integers(0, 7, size=n)
+    elif kind == "empty":
+        lengths = rng.integers(min_len, max_len + 1, size=n)
+        lengths[rng.random(n) < 0.3] = 0
+    else:
+        lengths = rng.integers(min_len, max_len + 1, size=n)
+    data = _assemble(lengths, rng)
+    if kind == "skewed" and n:
+        # gensort -s transplanted to lines: overwrite the first
+        # min(6, len) content bytes with a log2-indexed table entry
+        table = skew_table()
+        rec_idx = np.maximum(
+            np.arange(start_idx, start_idx + n, dtype=np.int64), 1
+        )
+        tidx = np.floor(np.log2(rec_idx)).astype(np.int64) % SKEW_TABLE_SIZE
+        starts = np.concatenate([[0], np.cumsum(lengths + 1)[:-1]])
+        cols = np.arange(6, dtype=np.int64)
+        valid = cols[None, :] < lengths[:, None]
+        pos = starts[:, None] + cols[None, :]
+        data[pos[valid]] = table[tidx][:, :6][valid]
+    return data
+
+
+def write_lines(
+    path: str,
+    n: int,
+    *,
+    kind: str = "uniform",
+    seed: int = 0,
+    min_len: int = 1,
+    max_len: int = 32,
+    chunk: int = 500_000,
+    terminate_last: bool = True,
+) -> None:
+    """Stream ``n`` lines of the given shape to ``path`` (chunked;
+    supports > memory corpora)."""
+    with open(path, "wb") as f:
+        done = 0
+        while done < n:
+            m = min(chunk, n - done)
+            buf = make_lines(
+                m, kind, seed=seed + done, start_idx=done,
+                min_len=min_len, max_len=max_len,
+            )
+            if not terminate_last and done + m == n and buf.size:
+                buf = buf[:-1]  # exercise the unterminated-final-line path
+            f.write(buf.tobytes())
+            done += m

@@ -66,6 +66,19 @@ def record_stripes(n_records: int, n_stripes: int) -> list[Stripe]:
     ]
 
 
+def byte_stripes(n_bytes: int, n_stripes: int) -> list[Stripe]:
+    """Split ``[0, n_bytes)`` into contiguous *byte* stripes.
+
+    The variable-length record formats (core/format.LineFormat) stripe by
+    byte position — record counts aren't known until the bytes are
+    scanned.  Same determinism contract as :func:`record_stripes`: bounds
+    are a pure function of the arguments, so any reader count re-derives
+    the same global record order (each stripe owns the records that
+    *start* inside it; see DESIGN.md §8).
+    """
+    return record_stripes(n_bytes, n_stripes)
+
+
 def stripe_batches(
     path: str, stripe: Stripe, batch_records: int
 ) -> Iterator[tuple[int, np.ndarray]]:

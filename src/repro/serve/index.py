@@ -1,4 +1,4 @@
-"""Learned-index query serving over sorted ELSAR output (DESIGN.md §7).
+"""Learned-index query serving over sorted ELSAR output (DESIGN.md §7, §8).
 
 A sorted ELSAR file is a concatenation of monotone equi-depth partitions,
 so the CDF model that produced it is already a learned index over it:
@@ -16,9 +16,14 @@ answers point lookups and range scans with
 Step 2's result is trusted only when it is provably the *global* answer
 (strictly inside the window, or bracketed by the window's outer
 neighbors), so a too-small error band degrades latency, never
-correctness.  All comparisons are memcmp on the raw 10-byte keys — byte
-identical to the sorter's own order, including ties beyond the 8-byte
-numeric embedding.
+correctness.
+
+The index serves both record layouts (``repro.core.format``): fixed
+gensort files address record *i* by stride, line files through the
+manifest's **offsets sidecar** — no delimiter rescans at query time.
+All comparisons are memcmp on the format's zero-padded key window
+(``key_width`` bytes) — byte-identical to the sorter's own order,
+including ties beyond the 8-byte numeric embedding.
 """
 
 from __future__ import annotations
@@ -28,15 +33,7 @@ import threading
 import numpy as np
 
 from repro.core import encoding, manifest as manifest_lib, rmi
-from repro.data import gensort
-
-_KEY_DT = f"S{gensort.KEY_BYTES}"
-
-
-def _keys_s(records: np.ndarray) -> np.ndarray:
-    """Contiguous |S10| copy of a (small) record window's keys."""
-    keys = np.ascontiguousarray(records[:, : gensort.KEY_BYTES])
-    return keys.view([("k", _KEY_DT)])["k"].reshape(-1)
+from repro.core.format import line_keys
 
 
 class SortedFileIndex:
@@ -45,16 +42,34 @@ class SortedFileIndex:
     def __init__(self, sorted_path: str, manifest: manifest_lib.SortManifest):
         self.path = sorted_path
         self.manifest = manifest
-        self.records = gensort.read_records(sorted_path)  # (n, 100) mmap
-        self.n = self.records.shape[0]
+        self.fmt = manifest.fmt
+        self.key_width = self.fmt.key_width
+        self._kdt = f"S{self.key_width}"
+        if self.fmt.kind == "line":
+            if manifest.line_offsets is None:
+                raise ValueError(
+                    f"line-format manifest for {sorted_path!r} lacks the "
+                    f"offsets sidecar — re-emit it (stale or hand-built?)"
+                )
+            # read_block validates offsets[-1] == file size (stale check)
+            self._block = self.fmt.read_block(
+                sorted_path, offsets=manifest.line_offsets
+            )
+            self.records = None  # no fixed-stride matrix view exists
+        else:
+            self._block = self.fmt.read_block(sorted_path)
+            self.records = self._block.data.reshape(
+                -1, self.fmt.record_bytes
+            )
+        self.n = self._block.n_records
         if self.n != manifest.n_records:
             raise ValueError(
                 f"{sorted_path!r} holds {self.n} records but its manifest "
                 f"says {manifest.n_records} — stale sidecar?"
             )
-        # (P,) |S10| boundary keys + (P+1,) record starts for the fallback
+        # (P,) |S{K}| boundary keys + (P+1,) record starts for the fallback
         self._bounds = np.ascontiguousarray(manifest.boundary_keys).view(
-            [("k", _KEY_DT)]
+            [("k", self._kdt)]
         )["k"].reshape(-1)
         self._starts = manifest.part_starts()
         # serving counters (read by QueryStats); QueryEngine's scan pool
@@ -70,6 +85,31 @@ class SortedFileIndex:
         """Attach to a sorted file; loads ``<path>.manifest.npz`` by default."""
         mpath = manifest_path or manifest_lib.manifest_path(sorted_path)
         return cls(sorted_path, manifest_lib.load(mpath))
+
+    # -- key plumbing --------------------------------------------------
+
+    def pad_key(self, raw: bytes) -> bytes:
+        """Zero-pad/truncate a raw key (e.g. line content) to the
+        format's key window — the form every query key must take."""
+        return raw[: self.key_width].ljust(self.key_width, b"\x00")
+
+    def _key_at(self, i: int) -> bytes:
+        if self.records is not None:
+            return self.records[i, : self.key_width].tobytes()
+        off = self._block.offsets
+        raw = self._block.data[off[i] : off[i + 1] - 1].tobytes()
+        return self.pad_key(raw)
+
+    def _keys_window(self, a: int, b: int) -> np.ndarray:
+        """Contiguous |S{K}| array of the padded keys of rows [a, b)."""
+        if self.records is not None:
+            keys = np.ascontiguousarray(self.records[a:b, : self.key_width])
+        else:
+            keys = line_keys(
+                self._block.data, self._block.offsets[a : b + 1],
+                self.key_width,
+            )
+        return keys.view([("k", self._kdt)])["k"].reshape(-1)
 
     # -- prediction ----------------------------------------------------
 
@@ -97,16 +137,13 @@ class SortedFileIndex:
 
     # -- search primitives ---------------------------------------------
 
-    def _key_at(self, i: int) -> bytes:
-        return self.records[i, : gensort.KEY_BYTES].tobytes()
-
     def _banded(self, q: bytes, pred: int, side: str) -> int | None:
         """searchsorted(q, side) inside the error-band window, or None
         when the window result is not provably the global answer."""
         m = self.manifest
         a = max(0, int(pred) - m.err_lo)
         b = min(self.n, int(pred) + m.err_hi + 1)
-        win = _keys_s(self.records[a:b])
+        win = self._keys_window(a, b)
         r = a + int(np.searchsorted(win, q, side=side))
         if r == a and a > 0:
             prev = self._key_at(a - 1)
@@ -147,24 +184,53 @@ class SortedFileIndex:
         """First row with record key >= ``key`` (n when past the end)."""
         if pred is None:
             pred = int(self.predict_positions(self._as_batch(key))[0])
-        return self._bound(key, pred, "left")
+        return self._bound(self.pad_key(key), pred, "left")
 
     def upper_bound(self, key: bytes, pred: int | None = None) -> int:
         """First row with record key > ``key``."""
         if pred is None:
             pred = int(self.predict_positions(self._as_batch(key))[0])
-        return self._bound(key, pred, "right")
+        return self._bound(self.pad_key(key), pred, "right")
 
-    @staticmethod
-    def _as_batch(key: bytes) -> np.ndarray:
-        return np.frombuffer(key, dtype=np.uint8)[None, : gensort.KEY_BYTES]
+    def _as_batch(self, key: bytes) -> np.ndarray:
+        return np.frombuffer(self.pad_key(key), dtype=np.uint8)[None, :]
+
+    # -- record materialization ----------------------------------------
+
+    def record_at(self, i: int) -> bytes:
+        """Raw bytes of record ``i`` (line records keep their delimiter)."""
+        return self._block.record(i)
+
+    def materialize(self, start: int, stop: int):
+        """Records ``[start, stop)``: an (m, record_bytes) view for fixed
+        layouts, a contiguous 1-D byte view for line layouts."""
+        if self.records is not None:
+            return self.records[start:stop]
+        off = self._block.offsets
+        return self._block.data[off[start] : off[stop]]
+
+    def fetch_rows(self, rows: np.ndarray, found: np.ndarray):
+        """First-match records for a point-lookup result: an
+        (B, record_bytes) array (zeros where absent) for fixed layouts,
+        a list of ``bytes | None`` for line layouts."""
+        if self.records is not None:
+            out = np.zeros(
+                (rows.shape[0], self.fmt.record_bytes), dtype=np.uint8
+            )
+            if found.any():
+                out[found] = self.records[rows[found]]
+            return out
+        return [
+            self.record_at(int(r)) if f else None
+            for r, f in zip(rows, found)
+        ]
 
     # -- queries -------------------------------------------------------
 
     def lookup(
         self, keys: np.ndarray, *, use_kernels: bool = False
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Batched point lookup of (B, K) u8 keys.
+        """Batched point lookup of (B, key_width) u8 padded keys.
 
         Returns ``(rows, found)``: the row of the *first* record matching
         each key (lower bound when absent) and a boolean hit mask.
@@ -173,7 +239,7 @@ class SortedFileIndex:
         rows = np.empty(keys.shape[0], dtype=np.int64)
         found = np.zeros(keys.shape[0], dtype=bool)
         for i in range(keys.shape[0]):
-            q = keys[i, : gensort.KEY_BYTES].tobytes()
+            q = keys[i, : self.key_width].tobytes()
             r = self._bound(q, int(preds[i]), "left")
             rows[i] = r
             found[i] = r < self.n and self._key_at(r) == q
@@ -185,11 +251,12 @@ class SortedFileIndex:
         preds = self.predict_positions(
             np.stack([self._as_batch(lo_key)[0], self._as_batch(hi_key)[0]])
         )
-        start = self._bound(lo_key, int(preds[0]), "left")
-        stop = self._bound(hi_key, int(preds[1]), "right")
+        start = self._bound(self.pad_key(lo_key), int(preds[0]), "left")
+        stop = self._bound(self.pad_key(hi_key), int(preds[1]), "right")
         return start, max(stop, start)
 
-    def range_scan(self, lo_key: bytes, hi_key: bytes) -> np.ndarray:
-        """All records with ``lo_key <= key <= hi_key`` (mmap-backed view)."""
+    def range_scan(self, lo_key: bytes, hi_key: bytes):
+        """All records with ``lo_key <= key <= hi_key`` (mmap-backed view;
+        see :meth:`materialize` for the per-format shape)."""
         start, stop = self.range_bounds(lo_key, hi_key)
-        return self.records[start:stop]
+        return self.materialize(start, stop)

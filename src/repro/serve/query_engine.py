@@ -25,7 +25,6 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from repro.data import gensort
 from repro.serve.index import SortedFileIndex
 
 
@@ -118,13 +117,13 @@ class QueryEngine:
 
     # -- point lookups -------------------------------------------------
 
-    def point(
-        self, keys: np.ndarray
-    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Batched point lookup: (B, K) u8 keys -> (records, rows, found).
+    def point(self, keys: np.ndarray):
+        """Batched point lookup: (B, key_width) u8 padded keys ->
+        (records, rows, found).
 
-        ``records`` is the (B, 100) array of first-match records (zeros
-        where ``found`` is False).
+        ``records`` holds the first-match record per query: a
+        (B, record_bytes) array (zero rows where ``found`` is False) for
+        fixed layouts, a list of ``bytes | None`` for line layouts.
         """
         b = keys.shape[0]
         t0 = time.perf_counter()
@@ -132,15 +131,14 @@ class QueryEngine:
         t1 = time.perf_counter()
         rows = np.empty(b, dtype=np.int64)
         found = np.zeros(b, dtype=bool)
+        kw = self.index.key_width
         for i in range(b):
-            q = keys[i, : gensort.KEY_BYTES].tobytes()
+            q = keys[i, :kw].tobytes()
             r = self.index._bound(q, int(preds[i]), "left")
             rows[i] = r
             found[i] = r < self.index.n and self.index._key_at(r) == q
         t2 = time.perf_counter()
-        out = np.zeros((b, self.index.records.shape[1]), dtype=np.uint8)
-        if found.any():
-            out[found] = self.index.records[rows[found]]
+        out = self.index.fetch_rows(rows, found)
         self._phase("predict", t1 - t0)
         self._phase("search", t2 - t1)
         self.stats.n_point += b
@@ -150,24 +148,28 @@ class QueryEngine:
 
     # -- range scans ---------------------------------------------------
 
-    def _scan_one(self, lo_key: bytes, hi_key: bytes) -> np.ndarray:
+    def _scan_one(self, lo_key: bytes, hi_key: bytes):
         t0 = time.perf_counter()
-        out = np.array(self.index.range_scan(lo_key, hi_key))
+        start, stop = self.index.range_bounds(lo_key, hi_key)
+        out = np.array(self.index.materialize(start, stop))
         dt = time.perf_counter() - t0
         self._phase("scan", dt)
         with self._lock:
             self.stats.latencies_s.append(dt)
-            self.stats.records_scanned += out.shape[0]
-        return out
+            self.stats.records_scanned += stop - start
+        return out, stop - start
 
-    def range(
-        self, ranges: "list[tuple[bytes, bytes]]"
-    ) -> "list[np.ndarray]":
-        """Concurrent inclusive range scans through the bounded pool."""
+    def range(self, ranges: "list[tuple[bytes, bytes]]") -> list:
+        """Concurrent inclusive range scans through the bounded pool.
+
+        Each result is the materialized record span — an (m, record_bytes)
+        array for fixed layouts, a 1-D byte array of the concatenated
+        lines for line layouts.
+        """
         futures = [
             self._pool.submit(self._scan_one, lo, hi) for lo, hi in ranges
         ]
-        out = [f.result() for f in futures]
+        results = [f.result() for f in futures]
         self.stats.n_range += len(ranges)
-        self.stats.n_hits += sum(1 for r in out if r.shape[0])
-        return out
+        self.stats.n_hits += sum(1 for _, m in results if m)
+        return [out for out, _ in results]

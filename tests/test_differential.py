@@ -1,0 +1,252 @@
+"""Differential correctness harness (DESIGN.md §8): `sort_file` output
+must be byte-identical to a Python ``sorted()`` oracle for BOTH record
+formats across corpus shapes × reader counts × forced-spill buffer
+sizes.
+
+Fixed format: the oracle is a stable argsort over the S10 key view —
+exactly the valsort contract.  Line format: stable sort by the
+zero-padded key window (``sort -s`` over the window), and — when the
+window covers the longest line — plain ``sorted(lines)``, i.e. GNU
+``LC_ALL=C sort`` stable memcmp order.
+
+Scale knobs (tier-2 CI runs a ~50 MB corpus under a tight memory cap):
+
+* ``REPRO_DIFF_BYTES``         — approximate corpus size (default small
+  for tier-1 speed)
+* ``REPRO_DIFF_BUDGET_BYTES``  — ``memory_budget_bytes`` for the sorts
+  (the ``sort -S``-style cap)
+"""
+
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import external, validate
+from repro.core.format import FixedFormat, LineFormat
+from repro.data import gensort, lines
+
+SCALE_BYTES = int(os.environ.get("REPRO_DIFF_BYTES", 256_000))
+BUDGET = int(os.environ.get("REPRO_DIFF_BUDGET_BYTES", 1 << 20))
+READERS = (1, 3)
+SHAPES = ("uniform", "skewed", "dups", "short", "empty")
+K = 16  # LineFormat key window
+
+# spill-pressure axis: coalesced (defaults) vs tiny forced-spill buffers
+SPILLS = {
+    "coalesced": {},
+    "forced_spill": {
+        "n_partitions": 16,
+        "batch_records": 1500,
+        # flush at 4 KB -> many small (stripe, seq) fragments per partition
+        "flush_bytes": 4 << 10,
+    },
+}
+
+N_FIXED = max(2_000, SCALE_BYTES // gensort.RECORD_BYTES)
+N_LINE = max(4_000, SCALE_BYTES // 20)
+
+
+def _sha(b: bytes) -> str:
+    return hashlib.sha256(b).hexdigest()
+
+
+def _fixed_corpus(path: str, shape: str) -> None:
+    """Fixed-format analogues of the five shapes: key entropy is the
+    axis (duplicates and constant keys stress tie stability and the
+    overflow fallback; low-entropy prefixes stress the encoder)."""
+    n = N_FIXED
+    if shape in ("uniform", "skewed"):
+        gensort.write_file(path, n, skewed=shape == "skewed")
+        return
+    rec = gensort.make_records(n, seed=11)
+    rng = np.random.default_rng(17)
+    if shape == "dups":  # keys from a 37-word vocab: full-key duplicates
+        vocab = gensort.uniform_keys(37, seed=99)
+        rec[:, : gensort.KEY_BYTES] = vocab[rng.integers(0, 37, n)]
+    elif shape == "short":  # only 3 leading bytes vary (short effective key)
+        rec[:, 3 : gensort.KEY_BYTES] = 0x20
+    elif shape == "empty":  # degenerate: every key identical
+        rec[:, : gensort.KEY_BYTES] = 0x2A
+    with open(path, "wb") as f:
+        f.write(rec.tobytes())
+
+
+def _fixed_oracle(path: str) -> bytes:
+    recs = gensort.read_records(path, mmap=False)
+    k = validate.keys_view(recs)
+    return recs[np.argsort(k, kind="stable")].tobytes()
+
+
+def _split_lines(raw: bytes) -> "list[bytes]":
+    ls = raw.split(b"\n")
+    if raw.endswith(b"\n"):
+        ls = ls[:-1]
+    return [l + b"\n" for l in ls]
+
+
+def _line_oracle(raw: bytes, key_width: int) -> bytes:
+    ls = _split_lines(raw)
+    return b"".join(
+        sorted(ls, key=lambda l: l[:-1][:key_width].ljust(key_width, b"\0"))
+    )
+
+
+@pytest.fixture(scope="module")
+def workdir(tmp_path_factory):
+    return tmp_path_factory.mktemp("diff")
+
+
+_CACHE: dict = {}
+
+
+def _corpus(workdir, fmt_kind: str, shape: str):
+    """(input_path, oracle_bytes, n_records, fmt, input_checksum) —
+    built once per (format, shape) and shared across the sweep."""
+    ck = (fmt_kind, shape)
+    if ck in _CACHE:
+        return _CACHE[ck]
+    if fmt_kind == "fixed":
+        fmt = FixedFormat(gensort.RECORD_BYTES, gensort.KEY_BYTES)
+        path = str(workdir / f"fixed_{shape}.bin")
+        _fixed_corpus(path, shape)
+        oracle = _fixed_oracle(path)
+        n = N_FIXED
+    else:
+        fmt = LineFormat(max_key_bytes=K)
+        path = str(workdir / f"line_{shape}.txt")
+        # "uniform" additionally drops the final newline: the sorter must
+        # normalize it exactly as GNU sort does
+        lines.write_lines(
+            path, N_LINE, kind=shape, seed=5,
+            terminate_last=shape != "uniform",
+        )
+        oracle = _line_oracle(open(path, "rb").read(), K)
+        n = N_LINE
+    refsum = validate.checksum_block(fmt.read_block(path))
+    _CACHE[ck] = (path, oracle, n, fmt, refsum)
+    return _CACHE[ck]
+
+
+@pytest.mark.parametrize("spill", sorted(SPILLS))
+@pytest.mark.parametrize("n_readers", READERS)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("fmt_kind", ["fixed", "line"])
+def test_differential(workdir, tmp_path, fmt_kind, shape, n_readers, spill):
+    inp, oracle, n, fmt, refsum = _corpus(workdir, fmt_kind, shape)
+    out = str(tmp_path / "out.bin")
+    stats = external.sort_file(
+        inp, out,
+        memory_budget_bytes=BUDGET,
+        n_readers=n_readers,
+        fmt=fmt,
+        **SPILLS[spill],
+    )
+    got = open(out, "rb").read()
+    assert _sha(got) == _sha(oracle), (
+        f"{fmt_kind}/{shape} r={n_readers} {spill}: output differs from "
+        f"sorted() oracle ({len(got)} vs {len(oracle)} bytes)"
+    )
+    assert stats.n_records == n
+    # the block validator agrees (sortedness + checksum + conservation)
+    res = validate.validate_file(out, refsum, n, fmt=fmt)
+    assert res["ok"], res
+
+
+def test_fixed_default_fmt_identical(workdir, tmp_path):
+    """fmt=None (the historical gensort entry point) and an explicit
+    FixedFormat must produce byte-identical output."""
+    inp, oracle, n, fmt, _ = _corpus(workdir, "fixed", "skewed")
+    a, b = str(tmp_path / "a.bin"), str(tmp_path / "b.bin")
+    external.sort_file(inp, a, memory_budget_bytes=BUDGET, n_readers=2)
+    external.sort_file(
+        inp, b, memory_budget_bytes=BUDGET, n_readers=2, fmt=fmt
+    )
+    assert _sha(open(a, "rb").read()) == _sha(open(b, "rb").read())
+    assert _sha(open(a, "rb").read()) == _sha(oracle)
+
+
+def test_line_full_memcmp_matches_gnu_sort_semantics(tmp_path):
+    """When the key window covers the longest line, output equals plain
+    ``sorted(lines)`` — byte-for-byte GNU ``LC_ALL=C sort`` stable
+    memcmp order (its whole-line comparison)."""
+    inp = str(tmp_path / "in.txt")
+    lines.write_lines(inp, 6_000, kind="uniform", seed=9, max_len=12)
+    raw = open(inp, "rb").read()
+    fmt = LineFormat(max_key_bytes=16)  # 16 > max content length 12
+    out = str(tmp_path / "out.txt")
+    external.sort_file(inp, out, memory_budget_bytes=BUDGET, fmt=fmt)
+    assert open(out, "rb").read() == b"".join(sorted(_split_lines(raw)))
+
+
+def test_line_serving_over_sorted_output(workdir, tmp_path):
+    """End-to-end on a line corpus: sort with a manifest, then point and
+    range lookups through the offsets sidecar match a linear scan."""
+    from repro.core import manifest as manifest_lib
+    from repro.serve.index import SortedFileIndex
+    from repro.serve.query_engine import QueryEngine
+
+    inp, _, _, fmt, _ = _corpus(workdir, "line", "skewed")
+    out = str(tmp_path / "out.txt")
+    external.sort_file(
+        inp, out, memory_budget_bytes=BUDGET, n_readers=2, fmt=fmt,
+        manifest=True,
+    )
+    m = manifest_lib.load(manifest_lib.manifest_path(out))
+    assert m.fmt == fmt and m.line_offsets is not None
+    index = SortedFileIndex.open(out)
+    ls = _split_lines(open(out, "rb").read())
+    keys = [l[:-1][:K].ljust(K, b"\0") for l in ls]
+    rng = np.random.default_rng(0)
+    pick = rng.choice(len(ls), 100, replace=False)
+    batch = np.stack(
+        [np.frombuffer(keys[i], np.uint8) for i in pick]
+    )
+    first_of: dict = {}
+    for j, k in enumerate(keys):
+        first_of.setdefault(k, j)
+    rows, found = index.lookup(batch)
+    assert found.all()
+    for i, r in zip(pick, rows):
+        first = first_of[keys[i]]  # leftmost duplicate
+        assert int(r) == first
+        assert index.record_at(int(r)) == ls[first]
+    # absent key: all-~ sorts past every printable line of this corpus
+    rows, found = index.lookup(
+        np.full((1, K), ord("~"), dtype=np.uint8)
+    )
+    assert not found[0]
+    # range scan through the engine equals the linear-scan reference
+    lo, hi = min(keys[10], keys[500]), max(keys[10], keys[500])
+    with QueryEngine(index, n_workers=2) as eng:
+        res = eng.range([(lo, hi)])
+    ref = b"".join(l for l, k in zip(ls, keys) if lo <= k <= hi)
+    assert res[0].tobytes() == ref
+
+
+def test_v1_manifest_back_compat(tmp_path):
+    """A v1 (pre-format-layer) manifest still loads — as gensort fixed —
+    and serves correct lookups."""
+    from repro.core import manifest as manifest_lib
+    from repro.serve.index import SortedFileIndex
+
+    inp, out = str(tmp_path / "in.bin"), str(tmp_path / "out.bin")
+    gensort.write_file(inp, 5_000)
+    external.sort_file(inp, out, memory_budget_bytes=BUDGET, manifest=True)
+    mpath = manifest_lib.manifest_path(out)
+    with np.load(mpath) as z:
+        payload = {k: z[k] for k in z.files if not k.startswith("fmt_")}
+    payload["version"] = np.int64(1)
+    v1 = str(tmp_path / "v1.npz")
+    with open(v1, "wb") as fh:
+        np.savez(fh, **payload)
+    m1 = manifest_lib.load(v1)
+    assert m1.version == 1
+    assert m1.fmt == FixedFormat(gensort.RECORD_BYTES, gensort.KEY_BYTES)
+    index = SortedFileIndex(out, m1)
+    recs = gensort.read_records(out, mmap=False)
+    rows, found = index.lookup(recs[1234:1235, : gensort.KEY_BYTES])
+    assert bool(found[0])
+    kv = validate.keys_view(recs)
+    assert kv[int(rows[0])] == kv[1234]  # first row with the queried key
