@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import os
 import sys
-import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

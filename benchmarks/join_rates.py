@@ -1,0 +1,108 @@
+"""Operator rates (DESIGN.md §9): merge-free external join / dedup /
+group-by over co-partitioned keyed line corpora, on the axes
+join selectivity {0, 0.1, 1.0} x duplicate factor {1, 16, 256}.
+
+Each row reports the co-partitioned sort cost and the operator's own
+streaming rate separately — the operator never re-sorts, so its rate is
+the marginal cost of the relational pass over already-sorted runs."""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks import common
+from repro.core import operators
+from repro.core.format import LineFormat
+from repro.data import lines
+
+SELECTIVITIES = (0.0, 0.1, 1.0)
+DUP_FACTORS = (1, 16, 256)
+# duplicate factor of the join corpora (dup sweep runs on one input)
+JOIN_DUP = 4
+
+
+def _corpus(tag: str, n: int, key_space: int, key_offset: int,
+            seed: int) -> str:
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    path = os.path.join(common.CACHE_DIR, f"keyed_{tag}_{n}.txt")
+    if not os.path.exists(path):
+        lines.write_keyed_lines(
+            path, n, key_space=key_space, key_offset=key_offset, seed=seed
+        )
+    return path
+
+
+def run(n_records: int = 1_000_000, budget: int = 64 << 20) -> list[dict]:
+    fmt = LineFormat(max_key_bytes=lines.KEYED_KEY_BYTES)
+    rows = []
+
+    # --- join axis: selectivity sweep at a fixed small dup factor
+    key_space = max(1, n_records // JOIN_DUP)
+    for sel in SELECTIVITIES:
+        loff, roff = lines.join_offsets(key_space, sel)
+        a = _corpus("jl", n_records, key_space, loff, seed=11)
+        b = _corpus(f"jr{int(sel * 100)}", n_records, key_space, roff,
+                    seed=23)
+        with common.Timer() as t_sort:
+            _, sorts = operators.sort_co_partitioned(
+                [a, b],
+                [a + ".sorted", b + ".sorted"],
+                fmt=fmt, memory_budget_bytes=budget,
+            )
+        out = os.path.join(common.CACHE_DIR, "join_out.txt")
+        st = operators.external_join(
+            a + ".sorted", b + ".sorted", out,
+            memory_budget_bytes=budget,
+        )
+        rows.append({
+            "op": "join",
+            "axis": f"sel{sel:g}",
+            "sort_seconds": t_sort.seconds,
+            "seconds": st.wall_seconds,
+            "rate_mb_s": st.rate_mb_s(),
+            "n_out": st.n_out,
+            "spill_fallbacks": st.spill_fallbacks,
+        })
+
+    # --- dedup / group-by axis: duplicate-factor sweep
+    for dup in DUP_FACTORS:
+        p = _corpus(f"dup{dup}", n_records, max(1, n_records // dup),
+                    0, seed=31)
+        operators.sort_co_partitioned(
+            [p], [p + ".sorted"], fmt=fmt, memory_budget_bytes=budget,
+        )
+        for op, fn in (
+            ("dedup", lambda s, o: operators.external_dedup(
+                s, o, counts=True, memory_budget_bytes=budget)),
+            ("groupby", lambda s, o: operators.external_groupby(
+                s, o, agg="sum", value_offset=lines.KEYED_KEY_BYTES,
+                value_width=lines.KEYED_VALUE_BYTES,
+                memory_budget_bytes=budget)),
+        ):
+            out = os.path.join(common.CACHE_DIR, f"{op}_out.txt")
+            st = fn(p + ".sorted", out)
+            rows.append({
+                "op": op,
+                "axis": f"dup{dup}",
+                "sort_seconds": 0.0,
+                "seconds": st.wall_seconds,
+                "rate_mb_s": st.rate_mb_s(),
+                "n_out": st.n_out,
+                "spill_fallbacks": st.spill_fallbacks,
+            })
+    return rows
+
+
+def main(n_records: int = 1_000_000) -> None:
+    for r in run(n_records):
+        common.emit(
+            f"op_{r['op']}_{r['axis']}",
+            r["seconds"] * 1e6,
+            f"rate={r['rate_mb_s']:.1f}MB/s out={r['n_out']} "
+            f"sort={r['sort_seconds']:.2f}s "
+            f"fallbacks={r['spill_fallbacks']}",
+        )
+
+
+if __name__ == "__main__":
+    main(int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000)))

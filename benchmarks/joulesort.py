@@ -16,7 +16,6 @@ import tempfile
 
 from benchmarks import common
 from repro.core import external, mergesort
-from repro.data import gensort
 
 WATTS = 65.0 + 10.0  # simulated package + storage power
 

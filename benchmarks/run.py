@@ -5,11 +5,22 @@ dry-run artifacts exist).
 ``--format {fixed,line,all}`` (or ``REPRO_BENCH_FORMAT``) selects the
 record-layout axis: ``fixed`` runs the historical gensort figures,
 ``line`` the variable-length newline-corpus rates (DESIGN.md §8), ``all``
-both."""
+both.
+
+``--op {none,ops,all}`` (or ``REPRO_BENCH_OP``) adds the merge-free
+operator axis (``benchmarks/join_rates.py``: join selectivity x dup
+factor, DESIGN.md §9).
+
+``--json PATH`` runs the **bench-smoke** collection instead of the
+figure suites: sort + query + operator rates on the fixed-seed corpus,
+written as one machine-readable JSON (the ``BENCH_ci.json`` artifact the
+CI job uploads so the perf trajectory accumulates per PR) plus a
+one-line rates summary on stdout."""
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import traceback
@@ -18,9 +29,36 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
+def smoke(n: int, json_path: str) -> None:
+    """Collect sort + query + operator rates into one JSON artifact."""
+    from benchmarks import join_rates, query_rates, sort_rates
+
+    data = {
+        "schema": 1,
+        "records": n,
+        "sort": sort_rates.run(n),
+        "query": query_rates.run(n),
+        "ops": join_rates.run(n),
+    }
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2, default=float)
+    sort_mb = max(
+        r["rate_mb_s"] for r in data["sort"] if r["algo"] == "elsar"
+    )
+    qps = max(r["qps"] for r in data["query"])
+    join_mb = max(
+        r["rate_mb_s"] for r in data["ops"] if r["op"] == "join"
+    )
+    print(
+        f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
+        f"query={qps:.0f}q/s join={join_mb:.1f}MB/s -> {json_path}"
+    )
+
+
 def main(argv: "list[str] | None" = None) -> None:
     from benchmarks import (
         io_stats,
+        join_rates,
         joulesort,
         partition_variance,
         phase_breakdown,
@@ -36,13 +74,30 @@ def main(argv: "list[str] | None" = None) -> None:
         default=os.environ.get("REPRO_BENCH_FORMAT", "fixed"),
         help="record-layout axis (default: fixed gensort figures)",
     )
+    ap.add_argument(
+        "--op",
+        choices=("none", "ops", "all"),
+        default=os.environ.get("REPRO_BENCH_OP", "none"),
+        help="merge-free operator axis (join/dedup/groupby rates)",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="bench-smoke mode: write sort+query+op rates as JSON",
+    )
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
     if args.format not in ("fixed", "line", "all"):
         # argparse does not validate defaults, so a typo'd
         # REPRO_BENCH_FORMAT must fail loudly, not select zero suites
         ap.error(f"invalid REPRO_BENCH_FORMAT {args.format!r}")
+    if args.op not in ("none", "ops", "all"):
+        ap.error(f"invalid REPRO_BENCH_OP {args.op!r}")
 
     n = int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000))
+    if args.json:
+        smoke(n, args.json)
+        return
     # explicit argv/args: the harness's own sys.argv must never leak into a
     # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that
     # takes a record count (Fig. 4's sizes are structural: budget multiples)
@@ -62,6 +117,10 @@ def main(argv: "list[str] | None" = None) -> None:
     if args.format in ("line", "all"):
         suites += [
             ("line_sort_rates", lambda: sort_rates.main_line(n)),
+        ]
+    if args.op in ("ops", "all"):
+        suites += [
+            ("op_join_rates", lambda: join_rates.main(n)),
         ]
     failures = 0
     for name, fn in suites:

@@ -14,7 +14,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import dataclasses
 
 from repro.configs.base import ModelConfig
-from repro.configs import registry
 from repro.launch.train import train
 
 # ~100M params: 12L x d768 (GQA 12/4) x ff 2048, 32k vocab

@@ -21,7 +21,6 @@ the radix baseline overflows under gensort skew (benchmarks/partition_variance).
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

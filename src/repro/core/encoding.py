@@ -21,6 +21,25 @@ import jax.numpy as jnp
 # Number of key bytes captured numerically by the (hi, lo) embedding.
 ENCODED_BYTES = 8
 
+
+def ascii_digits(values: np.ndarray, width: int) -> np.ndarray:
+    """(m, width) uint8 zero-padded ASCII decimal rendering of
+    non-negative int64 values (shared by the operator emitters and the
+    keyed corpus generators).  ``width`` must be <= 19: 10**19 exceeds
+    int64 and the digit extraction would silently corrupt."""
+    v = np.asarray(values, dtype=np.int64)
+    if width > 19:
+        raise ValueError(f"width {width} exceeds int64 decimal range")
+    if v.size and int(v.min()) < 0:
+        raise ValueError("ascii_digits requires non-negative values")
+    if width < 19 and v.size and int(v.max()) >= 10**width:
+        # silent modulo truncation would corrupt the column undetected
+        raise ValueError(
+            f"value {int(v.max())} does not fit {width} decimal digits"
+        )
+    pow10 = 10 ** np.arange(width - 1, -1, -1, dtype=np.int64)
+    return ((v[:, None] // pow10) % 10 + ord("0")).astype(np.uint8)
+
 # Sentinel that sorts after every real key (keys are printable ASCII < 0x80,
 # so 0xFFFFFFFF words can never be produced by ``encode``).
 SENTINEL = np.uint32(0xFFFFFFFF)

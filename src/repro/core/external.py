@@ -68,6 +68,7 @@ def sort_file(
     manifest: bool = False,
     fmt=None,
     flush_bytes: int = 1 << 20,
+    model=None,
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
 
@@ -75,6 +76,13 @@ def sort_file(
     threads in the partition phase.  Output is byte-identical for every
     reader count; > 1 additionally overlaps the partition/sort/write
     phases (visible as ``stats.overlap_seconds > 0``).
+
+    ``model`` supplies a pre-trained CDF model (``core/rmi.RMIParams``)
+    and skips the sample/train phase.  Sorting several inputs under one
+    shared model (with an explicit shared ``n_partitions``) makes their
+    outputs **co-partitioned**: partition j of every output covers the
+    same key range, which is what the merge-free join/dedup/group-by
+    operators consume (``core/operators.py``, DESIGN.md §9).
 
     ``fmt`` selects the record layout (``repro.core.format``, DESIGN.md
     §8): ``None`` keeps the historical gensort layout
@@ -102,5 +110,6 @@ def sort_file(
         emit_manifest=manifest,
         fmt=fmt,
         flush_bytes=flush_bytes,
+        model=model,
     )
     return run_pipeline(input_path, output_path, cfg)

@@ -23,11 +23,20 @@ output file (``<output>.manifest.npz``):
   prediction and falls back to partition-boundary search when the window
   misses, so an underestimated band costs latency, never correctness.
 
+* the **model hash** (v3+): a content hash of the trained model's
+  arrays.  Two sorted runs whose manifests carry the same hash were
+  partitioned by the *same* CDF model, i.e. they are **co-partitioned**
+  — partition j of each covers the identical key range — which is the
+  precondition the merge-free operators in ``core/operators.py`` verify
+  before streaming aligned partition pairs (DESIGN.md §9).
+
 Format version policy: ``MANIFEST_VERSION`` is a single integer bumped on
 any incompatible layout change.  ``load`` reads the current version and
-the v1 layout (v1 manifests predate the record-format layer and are by
-definition fixed gensort 100/10 — they load with that format and no
-offsets sidecar); any other version is refused (re-sort or re-emit with
+the older layouts: v1 manifests predate the record-format layer and are
+by definition fixed gensort 100/10 (they load with that format and no
+offsets sidecar); v2 manifests predate the model hash, which ``load``
+recomputes from the stored model arrays so co-partitioning checks work
+uniformly.  Any other version is refused (re-sort or re-emit with
 ``build``/``save`` to upgrade — manifests are derived data, never the
 source of truth).
 """
@@ -35,6 +44,7 @@ source of truth).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 import jax.numpy as jnp
@@ -42,9 +52,9 @@ import jax.numpy as jnp
 from repro.core import encoding, rmi
 from repro.core import format as format_lib
 
-MANIFEST_VERSION = 2
-# versions load() understands: current + the pre-format-layer layout
-_READABLE_VERSIONS = (1, 2)
+MANIFEST_VERSION = 3
+# versions load() understands: current + the two older layouts
+_READABLE_VERSIONS = (1, 2, 3)
 
 # error-band slack on top of the sampled max error: absorbs duplicates
 # whose leftmost occurrence sits before the sampled one, and f32 rounding
@@ -53,6 +63,21 @@ _ERR_PAD = 32
 
 def manifest_path(sorted_path: str) -> str:
     return sorted_path + ".manifest.npz"
+
+
+def model_hash(model: rmi.RMIParams) -> str:
+    """Content hash of a trained model: sha256 over every parameter
+    array's name, dtype, shape, and bytes.  Equal hashes <=> the two
+    sorts bucketed keys identically <=> their outputs are
+    co-partitioned (aligned equi-depth partitions, DESIGN.md §9)."""
+    h = hashlib.sha256()
+    for f in dataclasses.fields(rmi.RMIParams):
+        a = np.asarray(getattr(model, f.name))
+        h.update(f.name.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +95,9 @@ class SortManifest:
     fmt: "format_lib.FixedFormat | format_lib.LineFormat" = format_lib.GENSORT
     # (n + 1,) record-start byte offsets for variable-length output
     line_offsets: np.ndarray | None = None
+    # sha256 of the model arrays (v3+; recomputed on load for v1/v2) —
+    # equal hashes mean co-partitioned outputs (core/operators.py)
+    model_hash: str = ""
 
     @property
     def n_partitions(self) -> int:
@@ -146,6 +174,7 @@ def build(
             if fmt.kind == "line"
             else None
         ),
+        model_hash=model_hash(model),
     )
 
 
@@ -159,6 +188,7 @@ def save(m: SortManifest, path: str) -> None:
         "err_lo": np.int64(m.err_lo),
         "err_hi": np.int64(m.err_hi),
     }
+    payload["model_hash"] = np.array(m.model_hash)
     payload.update(m.fmt.manifest_fields())
     if m.line_offsets is not None:
         payload["line_offsets"] = np.asarray(m.line_offsets, dtype=np.int64)
@@ -202,5 +232,12 @@ def load(path: str) -> SortManifest:
                 z["line_offsets"].astype(np.int64)
                 if "line_offsets" in z.files
                 else None
+            ),
+            # v1/v2 predate the stored hash: recompute from the arrays so
+            # co-partitioning checks treat old manifests uniformly
+            model_hash=(
+                str(z["model_hash"])
+                if "model_hash" in z.files
+                else model_hash(model)
             ),
         )

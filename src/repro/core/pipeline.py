@@ -297,6 +297,11 @@ class SortPipelineConfig:
     emit_manifest: bool = False
     # record layout (core/format.py); None -> the gensort 100/10 layout
     fmt: "object | None" = None
+    # pre-trained CDF model (core/rmi.RMIParams); None -> sample + train.
+    # Sorting N inputs under ONE shared model makes their outputs
+    # co-partitioned (aligned equi-depth partitions), which is what the
+    # merge-free operators in core/operators.py consume (DESIGN.md §9).
+    model: "rmi.RMIParams | None" = None
 
 
 class _Abort(Exception):
@@ -619,28 +624,48 @@ def run_pipeline(
         n_est = fmt.estimate_n_records(input_path)
     stats.n_records = n_est  # exact count lands after the partition phase
 
-    if out_bytes == 0:  # nothing to sort; still produce the (empty) output
-        with clock.timer("setup"):
-            open(output_path, "wb").close()
-        clock.finish(stats)
-        return stats
-
     # partitions sized so one partition fits comfortably in the budget
     n_partitions = cfg.n_partitions
     if n_partitions == 0:
         part_bytes_target = max(cfg.memory_budget_bytes // 4, 1 << 20)
         n_partitions = max(1, int(np.ceil(file_bytes / part_bytes_target)))
 
+    if out_bytes == 0:  # nothing to sort; still produce the (empty) output
+        with clock.timer("setup"):
+            open(output_path, "wb").close()
+        # a shared-model sort must stay co-partition-aligned even when
+        # empty: emit the manifest with n_partitions zero counts so the
+        # operators (core/operators.py) can pair this run with its
+        # non-empty siblings.  Without a pre-trained model there is
+        # nothing to index — no manifest, as before.
+        if cfg.emit_manifest and cfg.model is not None:
+            from repro.core import manifest as manifest_lib
+
+            stats.partition_counts = [0] * n_partitions
+            with clock.timer("manifest"):
+                m = manifest_lib.build(
+                    cfg.model, stats.partition_counts, output_path, fmt=fmt
+                )
+                mpath = manifest_lib.manifest_path(output_path)
+                manifest_lib.save(m, mpath)
+                stats.manifest_path = mpath
+        clock.finish(stats)
+        return stats
+
     # --- Alg. 1 line 1: preallocate output (sparse on ext4/xfs)
     with clock.timer("setup"):
         with open(output_path, "wb") as f:
             f.truncate(out_bytes)
 
-    # --- Sample + Train stages (Alg. 1 line 2)
-    with clock.timer("train"):
-        sample = fmt.sample_keys(input_path, n_est, cfg.sample_frac)
-        clock.add_io(read=sample.shape[0] * fmt.key_width)
-        model = _train_stage(sample, cfg.n_leaf)
+    # --- Sample + Train stages (Alg. 1 line 2); a pre-trained shared
+    # model (co-partitioned multi-input sorts) skips both
+    if cfg.model is not None:
+        model = cfg.model
+    else:
+        with clock.timer("train"):
+            sample = fmt.sample_keys(input_path, n_est, cfg.sample_frac)
+            clock.add_io(read=sample.shape[0] * fmt.key_width)
+            model = _train_stage(sample, cfg.n_leaf)
 
     # --- Partition / Sort / Write stages, queue-connected
     tmp = tempfile.mkdtemp(prefix="elsar_", dir=cfg.workdir)

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import distributed, encoding, learned_sort, rmi, validate
+from repro.core import encoding, learned_sort, rmi
 from repro.core.external import SortStats, _Timer
 from repro.data import gensort
 

@@ -22,13 +22,29 @@ function of ``(kind, n, seed)``; ``write_lines`` streams chunks so
 corpora larger than memory are fine, and ``terminate_last=False`` drops
 the final newline to exercise the normalization path (GNU sort appends
 one; so does LineFormat).
+
+**Keyed / payload corpora** (DESIGN.md §9) feed the merge-free operator
+suite (``core/operators.py``): records are ``key value pad`` where the
+key is a zero-padded decimal index into a ``key_space``-sized universe
+(``dup factor = n / key_space``) and the value is a zero-padded decimal
+payload column (the group-by sum target).  ``join_offsets`` derives the
+key-universe shift that gives a requested join selectivity between two
+corpora; ``write_keyed_records`` is the fixed-layout (gensort-stride)
+twin of ``write_keyed_lines``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.data.gensort import ASCII_HI, ASCII_LO, SKEW_TABLE_SIZE, skew_table
+from repro.data.gensort import (
+    ASCII_HI,
+    ASCII_LO,
+    KEY_BYTES,
+    RECORD_BYTES,
+    SKEW_TABLE_SIZE,
+    skew_table,
+)
 
 KINDS = ("uniform", "skewed", "dups", "short", "empty")
 
@@ -126,4 +142,169 @@ def write_lines(
             if not terminate_last and done + m == n and buf.size:
                 buf = buf[:-1]  # exercise the unterminated-final-line path
             f.write(buf.tobytes())
+            done += m
+
+
+# ---------------------------------------------------------------------------
+# Keyed / payload corpora (operator workloads, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+KEYED_KEY_BYTES = 12  # decimal key column width of keyed line corpora
+KEYED_VALUE_BYTES = 8  # decimal value column width (group-by sum target)
+
+# Key indexes are rendered as ``(idx * _SCRAMBLE) % 10**width``: odd and
+# not divisible by 5, so the map is injective mod any 10**width (equal
+# keys <=> equal indexes) while spreading small key universes across the
+# full digit range — without this, a small universe would only vary in
+# its lowest digits, beyond the encoder's 8-byte window, and the CDF
+# model would see every key as identical (one giant partition).
+_SCRAMBLE = 99_999_989
+
+
+def _render_keys(kidx: np.ndarray, width: int) -> np.ndarray:
+    mx = int(kidx.max())
+    if mx >= 10**width:
+        raise ValueError(f"key universe exceeds {width} decimal digits")
+    if mx > (2**63 - 1) // _SCRAMBLE:
+        raise ValueError("key universe too large for int64 scrambling")
+    return (kidx * _SCRAMBLE) % (10**width)
+
+
+def join_offsets(key_space: int, selectivity: float) -> tuple[int, int]:
+    """Key-universe offsets ``(left, right)`` whose overlap fraction is
+    ``selectivity``: both universes span ``key_space`` keys; the right
+    one is shifted so exactly ``round(selectivity * key_space)`` keys
+    are shared.  At dup factor >= 1 essentially every universe key
+    occurs, so ``selectivity`` is the expected fraction of records with
+    a partner."""
+    if not 0.0 <= selectivity <= 1.0:
+        raise ValueError(f"selectivity must be in [0, 1], got {selectivity}")
+    overlap = int(round(selectivity * key_space))
+    return 0, key_space - overlap
+
+
+def _put_digits(
+    data: np.ndarray, starts: np.ndarray, values: np.ndarray, width: int,
+    at: int,
+) -> None:
+    """Write zero-padded decimal columns at content offset ``at``."""
+    from repro.core.encoding import ascii_digits
+
+    data[starts[:, None] + at + np.arange(width)] = ascii_digits(
+        values, width
+    )
+
+
+def make_keyed_lines(
+    n: int,
+    *,
+    key_space: int,
+    key_offset: int = 0,
+    seed: int = 0,
+    key_bytes: int = KEYED_KEY_BYTES,
+    value_bytes: int = KEYED_VALUE_BYTES,
+    pad_max: int = 12,
+) -> np.ndarray:
+    """``n`` keyed lines ``<key><value><pad>\\n``: zero-padded decimal
+    key drawn uniformly from ``[key_offset, key_offset + key_space)``,
+    zero-padded decimal value, then 0..``pad_max`` random printable pad
+    bytes (the variable-length tail)."""
+    if n == 0:
+        return np.empty(0, np.uint8)
+    if key_space < 1:
+        raise ValueError("key_space must be >= 1")
+    rng = _rng(seed)
+    kidx = key_offset + rng.integers(0, key_space, size=n, dtype=np.int64)
+    keys = _render_keys(kidx, key_bytes)
+    vals = rng.integers(
+        0, 10 ** min(value_bytes, 18), size=n, dtype=np.int64
+    )
+    pads = rng.integers(0, pad_max + 1, size=n).astype(np.int64)
+    lengths = key_bytes + value_bytes + pads
+    data = _assemble(lengths, rng)
+    starts = np.concatenate([[0], np.cumsum(lengths + 1)[:-1]])
+    _put_digits(data, starts, keys, key_bytes, 0)
+    _put_digits(data, starts, vals, value_bytes, key_bytes)
+    return data
+
+
+def write_keyed_lines(
+    path: str,
+    n: int,
+    *,
+    key_space: int,
+    key_offset: int = 0,
+    seed: int = 0,
+    key_bytes: int = KEYED_KEY_BYTES,
+    value_bytes: int = KEYED_VALUE_BYTES,
+    pad_max: int = 12,
+    chunk: int = 500_000,
+) -> None:
+    """Stream ``n`` keyed lines to ``path`` (chunked)."""
+    with open(path, "wb") as f:
+        done = 0
+        while done < n:
+            m = min(chunk, n - done)
+            f.write(
+                make_keyed_lines(
+                    m, key_space=key_space, key_offset=key_offset,
+                    seed=seed + done, key_bytes=key_bytes,
+                    value_bytes=value_bytes, pad_max=pad_max,
+                ).tobytes()
+            )
+            done += m
+
+
+def make_keyed_records(
+    n: int,
+    *,
+    key_space: int,
+    key_offset: int = 0,
+    seed: int = 0,
+    value_bytes: int = KEYED_VALUE_BYTES,
+) -> np.ndarray:
+    """Fixed-layout keyed twin: gensort-stride ``(n, 100)`` records whose
+    10-byte key is the zero-padded decimal key index and whose payload
+    starts with a zero-padded decimal value column."""
+    if key_space < 1:
+        raise ValueError("key_space must be >= 1")
+    rng = _rng(seed)
+    rec = rng.integers(
+        ASCII_LO, ASCII_HI + 1, size=(n, RECORD_BYTES), dtype=np.uint8
+    )
+    if n == 0:
+        return rec
+    kidx = key_offset + rng.integers(0, key_space, size=n, dtype=np.int64)
+    keys = _render_keys(kidx, KEY_BYTES)
+    vals = rng.integers(
+        0, 10 ** min(value_bytes, 18), size=n, dtype=np.int64
+    )
+    flat = rec.reshape(-1)
+    starts = np.arange(n, dtype=np.int64) * RECORD_BYTES
+    _put_digits(flat, starts, keys, KEY_BYTES, 0)
+    _put_digits(flat, starts, vals, value_bytes, KEY_BYTES)
+    return rec
+
+
+def write_keyed_records(
+    path: str,
+    n: int,
+    *,
+    key_space: int,
+    key_offset: int = 0,
+    seed: int = 0,
+    value_bytes: int = KEYED_VALUE_BYTES,
+    chunk: int = 500_000,
+) -> None:
+    """Stream ``n`` keyed fixed-stride records to ``path`` (chunked)."""
+    with open(path, "wb") as f:
+        done = 0
+        while done < n:
+            m = min(chunk, n - done)
+            f.write(
+                make_keyed_records(
+                    m, key_space=key_space, key_offset=key_offset,
+                    seed=seed + done, value_bytes=value_bytes,
+                ).tobytes()
+            )
             done += m

@@ -24,7 +24,7 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.core import encoding, rmi
+from repro.core import rmi
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,6 @@ temporaries); block_rows=8, C=2048 -> ~0.8 MiB.
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -85,6 +85,32 @@ def rmi_bucket(
     return out[:n_orig]
 
 
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_rows"))
+def rmi_bucket_pair(
+    params: rmi_lib.RMIParams,
+    hi_a: jnp.ndarray,
+    lo_a: jnp.ndarray,
+    hi_b: jnp.ndarray,
+    lo_b: jnp.ndarray,
+    n_buckets: int,
+    *,
+    block_rows: int = 1024,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched dual-input bucketing: both co-partitioned inputs' keys
+    through ONE fused RMI launch (DESIGN.md §9).
+
+    The bucket id is a function of the key alone, so the two inputs can
+    share a single padded batch — one kernel dispatch covers both sides
+    of a co-partitioned sort / operator alignment check instead of two
+    half-empty ones.
+    """
+    n_a = hi_a.shape[0]
+    hi = jnp.concatenate([hi_a, hi_b])
+    lo = jnp.concatenate([lo_a, lo_b])
+    out = rmi_bucket(params, hi, lo, n_buckets, block_rows=block_rows)
+    return out[:n_a], out[n_a:]
+
+
 def rmi_predict_pos(
     params: rmi_lib.RMIParams,
     hi: jnp.ndarray,

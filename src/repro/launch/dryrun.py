@@ -20,7 +20,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 # persistent compilation cache: re-runs of unchanged cells are ~free
 jax.config.update("jax_compilation_cache_dir", "experiments/xla_cache")

@@ -40,30 +40,30 @@ def make_workload(
 ) -> tuple[np.ndarray, "list[tuple[bytes, bytes]]"]:
     """Synthetic serving workload: ~50/50 hit/miss point keys + ranges
     spanning ``range_records`` consecutive records.  Shared by this CLI
-    and ``benchmarks/query_rates.py``."""
+    and ``benchmarks/query_rates.py``.  Format-generic: keys come from
+    the index's padded key window, so line-format runs (including
+    operator outputs from ``repro.launch.ops``) serve the same way."""
     rng = np.random.default_rng(seed)
     n = index.n
+    kw = index.key_width
     if n_points:
         hit = rng.choice(n, size=max(n_points // 2, 1), replace=True)
+        miss = np.random.default_rng(seed + 1).integers(
+            gensort.ASCII_LO, gensort.ASCII_HI + 1,
+            size=(n_points - hit.shape[0], kw), dtype=np.uint8,
+        )
         points = np.concatenate(
-            [
-                np.array(index.records[np.sort(hit), : gensort.KEY_BYTES]),
-                gensort.uniform_keys(n_points - hit.shape[0], seed=seed + 1),
-            ]
+            [index.keys_at(np.sort(hit)), miss]
         )[:n_points]
         rng.shuffle(points, axis=0)
     else:
-        points = np.empty((0, gensort.KEY_BYTES), dtype=np.uint8)
+        points = np.empty((0, kw), dtype=np.uint8)
     ranges = []
     for _ in range(n_ranges):
         a = int(rng.integers(0, max(n - range_records, 1)))
         b = min(n - 1, a + range_records)
-        ranges.append(
-            (
-                index.records[a, : gensort.KEY_BYTES].tobytes(),
-                index.records[b, : gensort.KEY_BYTES].tobytes(),
-            )
-        )
+        lo_hi = index.keys_at(np.array([a, b]))
+        ranges.append((lo_hi[0].tobytes(), lo_hi[1].tobytes()))
     return points, ranges
 
 

@@ -9,12 +9,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.launch.mesh import make_mesh
 from repro.models.api import build_model
 from repro.serve.engine import ServeEngine
 

@@ -17,7 +17,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import registry
 from repro.data.pipeline import PipelineConfig, SyntheticLM

@@ -5,7 +5,7 @@ ShapeDtypeStructs — nothing is allocated)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ are expressed as longer periods, not unrolled layers.
 """
 
 from __future__ import annotations
-
-import functools
 from typing import Any
 
 import jax
@@ -301,7 +299,6 @@ def prefill(cfg, params, tokens, frontend_embeds=None, max_seq: int | None = Non
     """
     x = embed_inputs(cfg, params, tokens, frontend_embeds)
     s = x.shape[1]
-    b = x.shape[0]
     positions = jnp.arange(s, dtype=jnp.int32)[None, :]
     cache_groups = []
 

@@ -100,6 +100,28 @@ class SortedFileIndex:
         raw = self._block.data[off[i] : off[i + 1] - 1].tobytes()
         return self.pad_key(raw)
 
+    def keys_at(self, rows: np.ndarray) -> np.ndarray:
+        """(m, key_width) u8 padded keys of the given rows — the batch
+        form every query entry point accepts (workload generators)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        if self.records is not None:
+            return np.array(self.records[rows, : self.key_width])
+        # line layout: one vectorized gather over the picked rows'
+        # content spans (same masked-position trick as format.line_keys,
+        # which needs consecutive offsets and so can't take a row pick)
+        off = self._block.offsets
+        starts = off[rows]
+        lens = np.minimum(off[rows + 1] - 1 - starts, self.key_width)
+        cols = np.arange(self.key_width, dtype=np.int64)
+        valid = cols[None, :] < lens[:, None]
+        pos = np.minimum(
+            starts[:, None] + cols[None, :],
+            max(int(self._block.data.shape[0]) - 1, 0),
+        )
+        return np.where(
+            valid, np.asarray(self._block.data)[pos], np.uint8(0)
+        ).astype(np.uint8, copy=False)
+
     def _keys_window(self, a: int, b: int) -> np.ndarray:
         """Contiguous |S{K}| array of the padded keys of rows [a, b)."""
         if self.records is not None:

@@ -17,6 +17,9 @@ test rather than reaching for ``pytest.importorskip``.
 
 from __future__ import annotations
 
+# the module's whole purpose is re-exporting these three names
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:  # pragma: no cover - exercised implicitly by which branch CI takes
     from hypothesis import given, settings, strategies as st
 

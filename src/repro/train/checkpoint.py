@@ -21,7 +21,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import tempfile
 from typing import Any
 
 import numpy as np

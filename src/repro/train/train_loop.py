@@ -8,8 +8,7 @@ The returned step is a pure jit-able ``(params, opt_state, batch) ->
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

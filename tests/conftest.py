@@ -1,7 +1,15 @@
+# Path setup is consolidated in pyproject.toml ([tool.pytest.ini_options]
+# pythonpath = ["src", "."]), so `python -m pytest` needs no PYTHONPATH
+# prefix.  This sys.path twin keeps direct invocations that bypass the ini
+# (running a single file from another cwd, IDE runners) identical.
+#
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device.  Multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves (test_distributed_sort).
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_root, "src"), _root):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

@@ -44,7 +44,6 @@ def test_chunked_cross_with_padding():
 def test_decode_matches_full_prefix():
     """attend_decode over a cache == last row of full attention."""
     from repro.configs import registry
-    from repro.models.api import build_model
 
     cfg = registry.get_config("qwen3-8b", smoke=True)
     p = __import__(

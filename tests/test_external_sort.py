@@ -1,7 +1,5 @@
 """Integration: ELSAR file sort + External Mergesort baseline (paper §7)."""
 
-import os
-
 import numpy as np
 import pytest
 

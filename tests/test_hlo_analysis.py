@@ -68,9 +68,6 @@ def test_grad_flops_in_expected_band():
 
 
 def test_collectives_counted_with_trips():
-    import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     if jax.device_count() < 2:
         pytest.skip("needs >= 2 devices")
 

@@ -2,7 +2,6 @@
 serving, and the phase-overlap instrumentation."""
 
 import hashlib
-import os
 
 import numpy as np
 import pytest

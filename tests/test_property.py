@@ -1,12 +1,11 @@
 """Hypothesis property tests on system invariants."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.testing.hypothesis_compat import given, settings, st
 
-from repro.core import encoding, learned_sort, rmi, validate
+from repro.core import learned_sort, rmi, validate
 from repro.data import gensort, pipeline
 
 

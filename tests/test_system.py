@@ -3,9 +3,7 @@ sort -> valsort-validate, plus cross-checks against the mergesort baseline
 (both must produce byte-identical outputs)."""
 
 import hashlib
-import os
 
-import numpy as np
 import pytest
 
 from repro.core import external, mergesort, validate
