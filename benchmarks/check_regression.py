@@ -1,0 +1,114 @@
+"""Diff a bench-smoke JSON against the committed baseline (CI gate).
+
+Usage: ``python benchmarks/check_regression.py BASELINE.json CURRENT.json``
+
+Two hard gates (exit 1) plus an informational report:
+
+* **dispatch-count regression**: the batched executor's device dispatch
+  count may not grow more than 20% over the baseline — launch-overhead
+  creep is exactly what the batched executor exists to prevent;
+* **batching floor**: the batched executor must keep >= 4x fewer
+  dispatches than the per-partition baseline path (the PR-5 acceptance
+  bar).
+
+Sort/query/join *rates* are reported as deltas but never gate: shared CI
+runners are too noisy for wall-clock thresholds, while dispatch counts
+are deterministic.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+DISPATCH_REGRESSION_LIMIT = 1.20  # >20% more dispatches than baseline fails
+BATCHING_FLOOR = 4  # batched must be >= 4x below per-partition
+
+
+def _executor_row(data: dict, name: str) -> dict:
+    for row in data.get("executor", []):
+        if row["executor"] == name:
+            return row
+    raise SystemExit(f"no executor={name!r} row in bench JSON")
+
+
+def _rate(data: dict, section: str, pick) -> float:
+    rows = [r for r in data.get(section, []) if pick(r)]
+    return max(r["rate_mb_s"] for r in rows) if rows else float("nan")
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        base = json.load(f)
+    with open(argv[1]) as f:
+        cur = json.load(f)
+
+    failures = []
+    b_bat = _executor_row(base, "batched")
+    c_bat = _executor_row(cur, "batched")
+    c_per = _executor_row(cur, "per_partition")
+
+    # dispatch counts are only comparable on an identical configuration —
+    # fail loudly on corpus/partition skew instead of fake-gating (e.g.
+    # a REPRO_BENCH_RECORDS bump in ci.yml without a baseline refresh)
+    if base.get("records") != cur.get("records"):
+        failures.append(
+            f"corpus skew: baseline records={base.get('records')} vs "
+            f"current={cur.get('records')} — refresh the baseline"
+        )
+    if b_bat.get("n_partitions") != c_bat.get("n_partitions"):
+        failures.append(
+            f"partition skew: baseline n_partitions="
+            f"{b_bat.get('n_partitions')} vs "
+            f"{c_bat.get('n_partitions')} — refresh the baseline"
+        )
+
+    limit = int(b_bat["dispatches"] * DISPATCH_REGRESSION_LIMIT)
+    print(
+        f"dispatches: batched {b_bat['dispatches']} -> "
+        f"{c_bat['dispatches']} (limit {limit}), "
+        f"per-partition {c_per['dispatches']}"
+    )
+    if c_bat["dispatches"] > limit:
+        failures.append(
+            f"batched dispatch count regressed >20%: "
+            f"{c_bat['dispatches']} > {limit} "
+            f"(baseline {b_bat['dispatches']})"
+        )
+    if c_bat["dispatches"] * BATCHING_FLOOR > c_per["dispatches"]:
+        failures.append(
+            f"batching floor broken: batched={c_bat['dispatches']} "
+            f"is not >= {BATCHING_FLOOR}x below "
+            f"per_partition={c_per['dispatches']}"
+        )
+
+    # fast-path health: fallbacks on the uniform bench corpus mean the
+    # fused graph is not actually running (informational — duplicate-
+    # heavy corpora fall back by design, but uniform should not)
+    print(
+        f"batched fallbacks: {b_bat.get('fallbacks', '?')} -> "
+        f"{c_bat.get('fallbacks', '?')}"
+    )
+
+    # informational rate deltas (never gate — CI wall clocks are noisy)
+    for label, section, pick in [
+        ("sort", "sort", lambda r: r.get("algo") == "elsar"),
+        ("join", "ops", lambda r: r.get("op") == "join"),
+        ("batched-exec", "executor", lambda r: r["executor"] == "batched"),
+    ]:
+        b, c = _rate(base, section, pick), _rate(cur, section, pick)
+        if b == b and c == c:  # both non-NaN
+            print(f"{label} rate: {b:.1f} -> {c:.1f} MB/s "
+                  f"({(c - b) / b * 100:+.0f}%)")
+
+    for f_ in failures:
+        print(f"FAIL: {f_}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

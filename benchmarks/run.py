@@ -30,15 +30,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def smoke(n: int, json_path: str) -> None:
-    """Collect sort + query + operator rates into one JSON artifact."""
+    """Collect sort + query + operator + executor rates into one JSON
+    artifact (``benchmarks/check_regression.py`` diffs it against the
+    committed ``BENCH_*.json`` baseline)."""
     from benchmarks import join_rates, query_rates, sort_rates
 
     data = {
-        "schema": 1,
+        "schema": 2,
         "records": n,
         "sort": sort_rates.run(n),
         "query": query_rates.run(n),
         "ops": join_rates.run(n),
+        # device-executor axis (DESIGN.md §10): batched super-batches vs
+        # the per-partition dispatch baseline
+        "executor": sort_rates.run_executor(n),
     }
     with open(json_path, "w") as f:
         json.dump(data, f, indent=2, default=float)
@@ -49,9 +54,12 @@ def smoke(n: int, json_path: str) -> None:
     join_mb = max(
         r["rate_mb_s"] for r in data["ops"] if r["op"] == "join"
     )
+    disp = {r["executor"]: r["dispatches"] for r in data["executor"]}
     print(
         f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
-        f"query={qps:.0f}q/s join={join_mb:.1f}MB/s -> {json_path}"
+        f"query={qps:.0f}q/s join={join_mb:.1f}MB/s "
+        f"dispatches={disp.get('batched')}/{disp.get('per_partition')} "
+        f"(batched/per-partition) -> {json_path}"
     )
 
 

@@ -40,6 +40,34 @@ def main(n_records: int = 1_000_000):
         )
 
 
+def run_executor(n_records: int, n_partitions: int = 16) -> list[dict]:
+    """Device-executor comparison on the fixed-seed corpus: the batched
+    super-batch executor vs the historical per-partition dispatch chain
+    (DESIGN.md §10).  ``dispatches`` is the number the bench-smoke CI job
+    tracks — the batched path must stay >= 4x below per-partition."""
+    path, chk = common.dataset(n_records, False)
+    rows = []
+    for executor in ("batched", "per_partition"):
+        with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+            stats = external.sort_file(
+                path, out.name, device_sort=True, executor=executor,
+                n_partitions=n_partitions,
+            )
+            res = validate.validate_file(out.name, chk, n_records)
+            assert res["ok"], (executor, res)
+            rows.append({
+                "executor": executor,
+                "n_partitions": n_partitions,
+                "dispatches": stats.device_dispatches,
+                "occupancy": stats.batch_occupancy,
+                "jit_compiles": stats.jit_compiles,
+                "fallbacks": stats.fallbacks,
+                "rate_mb_s": stats.rate_mb_s(),
+                "seconds": stats.wall_seconds or stats.total_seconds,
+            })
+    return rows
+
+
 def run_line(n_records: int, budget=64 << 20) -> list[dict]:
     """Sorting rates on variable-length newline corpora (the GNU-sort
     workload; ``--format line`` axis of benchmarks/run.py)."""

@@ -69,6 +69,7 @@ def sort_file(
     fmt=None,
     flush_bytes: int = 1 << 20,
     model=None,
+    executor: str = "auto",
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
 
@@ -93,6 +94,16 @@ def sort_file(
     ``manifest=True`` additionally emits ``<output>.manifest.npz`` — the
     trained model + partition map + error band that turns the sorted file
     into a servable learned index (``repro.serve.index``, DESIGN.md §7).
+
+    ``executor`` selects the sort implementation behind the
+    ``SortExecutor`` seam (``repro.core.executor``, DESIGN.md §10):
+    ``"auto"`` uses the host LearnedSort unless ``device_sort`` /
+    ``use_kernels`` request the device path, which now runs the batched
+    device-resident executor (super-batches of partitions, one fused
+    encode→RMI→bitonic dispatch each); ``"per_partition"`` forces the
+    historical one-dispatch-per-partition device path;
+    ``"host"``/``"batched"`` force those explicitly.  Output is
+    byte-identical across executors.
     """
     del keep_stats  # accepted for compatibility; stats are always kept
     device_sort = device_sort or use_kernels  # kernels imply device path
@@ -111,5 +122,6 @@ def sort_file(
         fmt=fmt,
         flush_bytes=flush_bytes,
         model=model,
+        executor=executor,
     )
     return run_pipeline(input_path, output_path, cfg)

@@ -877,6 +877,9 @@ def sort_co_partitioned(
     n_leaf: int = 0,
     workdir: str | None = None,
     flush_bytes: int = 1 << 20,
+    device_sort: bool = False,
+    use_kernels: bool = False,
+    executor: str = "auto",
 ):
     """Sort N inputs under ONE shared model -> co-partitioned outputs.
 
@@ -885,6 +888,11 @@ def sort_co_partitioned(
     (the max of the per-input budget-derived sizings), emitting a v3
     manifest per output.  Returns ``(model, [SortStats, ...])``; the
     outputs are then directly consumable by the operators above.
+
+    ``device_sort`` / ``use_kernels`` / ``executor`` select the sort
+    executor exactly as in ``external.sort_file`` (DESIGN.md §10) — all
+    N inputs run through the same executor configuration, so their
+    outputs stay byte-comparable.
     """
     from repro.core import external
     from repro.core.pipeline import _train_stage
@@ -919,6 +927,9 @@ def sort_co_partitioned(
             fmt=fmt,
             flush_bytes=flush_bytes,
             model=model,
+            device_sort=device_sort,
+            use_kernels=use_kernels,
+            executor=executor,
         )
         for inp, out in zip(inputs, outputs)
     ]

@@ -1,44 +1,33 @@
-"""Pipelined, parallel ELSAR runtime (paper §3.2 + Fig. 6; DESIGN.md §1).
+"""Pipelined, parallel ELSAR runtime — the stage orchestrator
+(paper §3.2 + Fig. 6; DESIGN.md §1, §10).
 
-The paper's headline result comes from r parallel reader threads and from
-overlapping the partition, sort, and write phases.  This module is that
-runtime: five composable phase stages
+The runtime is five composable phase stages
 
     Sample -> Train -> Partition -> Sort -> Write
 
-connected by bounded queues, with
+connected by bounded queues.  Since PR 5 the stages live in the
+``repro.core.stages`` package (one module per stage: ``reader``,
+``loader``, ``sorter``, ``writer``, plus ``stats`` and ``queues``), and
+the sort implementation sits behind the pluggable
+``repro.core.executor.SortExecutor`` seam — host LearnedSort by default,
+the device-resident batched executor for the device path.  This module
+is the orchestrator: it sizes partitions, wires the stages together,
+surfaces worker errors, and keeps the historical import paths working
+(``SortStats``, ``PhaseClock``, ``PartitionSpill``, ``run_pipeline`` and
+``SortPipelineConfig`` have always been importable from here).
 
-* an r-way **striped reader pool** — each reader owns contiguous stripes
-  of the input (data/pipeline.record_stripes), predicts partition ids with
-  the shared RMI, and appends records to per-partition spill files;
-* **per-reader fragment buffers** flushed with coalesced (>= flush_bytes)
-  writes, so spill I/O stays sequential per partition;
-* a **fragment index**: every flushed fragment is tagged (stripe, seq), so
-  the loader reconstructs exact global input order no matter which reader
-  flushed first.  Output is therefore byte-identical for any ``n_readers``
-  — ties between equal keys stay in input order, matching both the
-  sequential path and the stable mergesort baseline;
-* a sort/write stage that begins **draining completed spill fragments
-  while partitioning of later stripes is still in flight** (the loader
-  pre-reads committed fragments of upcoming partitions), then pipelines
-  load -> sort -> write across partitions once fragment sets are final.
-
-A partition's fragment *set* is only final once every reader has finished
-(any input record can map to any partition), so the sort proper starts at
-that point; the measurable overlap comes from (a) the r-way read
-parallelism inside the partition phase, (b) the eager fragment drain, and
-(c) the load/sort/write pipeline across partitions.
-
-Instrumentation (``SortStats``): per-phase *busy* seconds (summed over
-workers — the sequential-equivalent cost, and exactly the old accounting
-when ``n_readers == 1``), per-phase *wall-clock spans*, per-phase *thread
-CPU* seconds, and the end-to-end ``wall_seconds``.  Phase overlap is then
-visible as ``sum(phase_seconds.values()) > wall_seconds``.
+Determinism and overlap are stage properties, documented where they are
+implemented: the striped reader pool and the ``(stripe, seq)`` fragment
+index in ``stages/reader.py``, the eager fragment drain in
+``stages/loader.py``, positioned writes in ``stages/writer.py``.  Output
+is byte-identical for any ``n_readers`` *and any executor* — ties between
+equal keys stay in input order everywhere.
 
 Memory: partitions are sized to ``memory_budget_bytes / 4`` (as before);
 the bounded queues keep at most ``2 * queue_depth + 2`` partitions plus
-one prefetch window resident, so peak use stays within a small multiple of
-the budget.
+one prefetch window resident (the batched executor adds its in-flight
+super-batches, bounded by its ``batch_bytes``), so peak use stays within
+a small multiple of the budget.
 """
 
 from __future__ import annotations
@@ -48,227 +37,36 @@ import os
 import queue
 import tempfile
 import threading
-import time
 
 import numpy as np
 
 from repro.core import rmi
-from repro.core.format import GENSORT, RecordBlock
-from repro.data import gensort
+from repro.core.executor import make_executor, sort_partition
+from repro.core.format import GENSORT
+from repro.core.stages import (
+    PartitionSpill,
+    PhaseClock,
+    SortStats,
+    loader_worker,
+    reader_worker,
+    sorter_worker,
+    writer_worker,
+)
+# Historical import paths (pre-stage-decomposition): callers imported
+# the queue plumbing and the per-partition sort from here.
+from repro.core.stages.queues import Abort as _Abort  # noqa: F401
+from repro.core.stages.queues import get as _get  # noqa: F401
+from repro.core.stages.queues import put as _put  # noqa: F401
 
+_sort_partition = sort_partition
 
-# ---------------------------------------------------------------------------
-# Instrumentation
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class SortStats:
-    """Instrumentation for one file sort.
-
-    ``phase_seconds`` are busy seconds *summed across workers* (the
-    sequential-equivalent cost; identical to the historical accounting when
-    ``n_readers == 1``).  ``phase_wall_seconds`` is each phase's span from
-    first start to last finish, and ``wall_seconds`` the end-to-end span —
-    so ``total_seconds > wall_seconds`` is the signature of phase overlap
-    (paper Fig. 6's pipelining effect).
-    """
-
-    n_records: int = 0
-    input_bytes: int = 0
-    bytes_read: int = 0
-    bytes_written: int = 0
-    phase_seconds: dict = dataclasses.field(default_factory=dict)
-    partition_counts: list = dataclasses.field(default_factory=list)
-    fallbacks: int = 0
-    # pipelined-runtime additions
-    n_readers: int = 1
-    wall_seconds: float = 0.0
-    phase_wall_seconds: dict = dataclasses.field(default_factory=dict)
-    phase_cpu_seconds: dict = dataclasses.field(default_factory=dict)
-    # set when the sort also emitted a query-serving sidecar (DESIGN.md §7)
-    manifest_path: str | None = None
-
-    @property
-    def total_seconds(self) -> float:
-        return sum(self.phase_seconds.values())
-
-    @property
-    def io_bytes(self) -> int:
-        return self.bytes_read + self.bytes_written
-
-    @property
-    def overlap_seconds(self) -> float:
-        """Busy seconds hidden by pipelining/parallelism (0 if sequential)."""
-        if not self.wall_seconds:
-            return 0.0
-        return max(0.0, self.total_seconds - self.wall_seconds)
-
-    def rate_mb_s(self) -> float:
-        # sequential baselines (mergesort/terasort) predate ``input_bytes``
-        # and keep the fixed-gensort accounting as a fallback
-        total = self.input_bytes or self.n_records * gensort.RECORD_BYTES
-        elapsed = self.wall_seconds or self.total_seconds
-        return total / max(elapsed, 1e-9) / 1e6
-
-
-class PhaseClock:
-    """Thread-safe phase accounting shared by every stage worker.
-
-    ``timer(phase)`` context-manages one busy interval: busy seconds are
-    summed per phase, wall spans are merged (min start / max end), and
-    thread CPU time is accumulated via ``time.thread_time``.
-    """
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._t0 = time.perf_counter()
-        self.busy: dict[str, float] = {}
-        self.cpu: dict[str, float] = {}
-        self.span: dict[str, list[float]] = {}
-        self.bytes_read = 0
-        self.bytes_written = 0
-
-    def timer(self, phase: str) -> "_PhaseTimer":
-        return _PhaseTimer(self, phase)
-
-    def add_io(self, read: int = 0, written: int = 0) -> None:
-        with self._lock:
-            self.bytes_read += read
-            self.bytes_written += written
-
-    def _record(self, phase: str, t0: float, t1: float, cpu_dt: float) -> None:
-        with self._lock:
-            self.busy[phase] = self.busy.get(phase, 0.0) + (t1 - t0)
-            self.cpu[phase] = self.cpu.get(phase, 0.0) + cpu_dt
-            span = self.span.setdefault(phase, [t0, t1])
-            span[0] = min(span[0], t0)
-            span[1] = max(span[1], t1)
-
-    def finish(self, stats: SortStats) -> None:
-        stats.wall_seconds = time.perf_counter() - self._t0
-        stats.phase_seconds = dict(self.busy)
-        stats.phase_cpu_seconds = dict(self.cpu)
-        stats.phase_wall_seconds = {
-            p: s[1] - s[0] for p, s in self.span.items()
-        }
-        stats.bytes_read += self.bytes_read
-        stats.bytes_written += self.bytes_written
-
-
-class _PhaseTimer:
-    def __init__(self, clock: PhaseClock, phase: str):
-        self.clock, self.phase = clock, phase
-        self._discarded = False
-
-    def discard(self) -> None:
-        """Drop this interval (e.g. an idle poll that did no phase work) —
-        otherwise empty polls would stretch the phase's wall span."""
-        self._discarded = True
-
-    def __enter__(self):
-        self.t0 = time.perf_counter()
-        self.c0 = time.thread_time()
-        return self
-
-    def __exit__(self, *exc):
-        if not self._discarded:
-            self.clock._record(
-                self.phase,
-                self.t0,
-                time.perf_counter(),
-                time.thread_time() - self.c0,
-            )
-
-
-# ---------------------------------------------------------------------------
-# Spill files with a fragment index
-# ---------------------------------------------------------------------------
-
-
-class PartitionSpill:
-    """One partition's spill file: coalesced appends + a fragment index.
-
-    Writers (readers of the input) append pre-coalesced fragment blobs
-    under a lock, each tagged ``(stripe, seq)``.  Blobs are opaque record
-    bytes — the caller supplies the record count, so the spill layer is
-    record-format-agnostic (fixed-stride and delimiter-terminated blobs
-    spill identically).  The loader side runs in a single thread and may
-    ``prefetch()`` committed fragments *while writers are still
-    appending* — segments are recorded only after their bytes hit the
-    file, so reading a recorded segment is always safe.  ``take()``
-    finalizes: reads the rest, reorders fragments by (stripe, seq) into
-    global input order, and deletes the file.
-    """
-
-    def __init__(self, path: str):
-        self.path = path
-        self._lock = threading.Lock()
-        self._f = None
-        self._pos = 0
-        self.n_records = 0
-        self.segments: list[tuple[int, int, int, int]] = []  # stripe, seq, off, len
-        self._loaded: dict[int, bytes] = {}  # loader-thread-only
-        self._read_fd = -1
-
-    @property
-    def n_bytes(self) -> int:
-        return self._pos
-
-    # -- writer side (reader pool) ------------------------------------
-    def append(self, stripe: int, seq: int, blob: bytes, n_records: int) -> None:
-        with self._lock:
-            if self._f is None:
-                self._f = open(self.path, "wb", buffering=0)
-            self._f.write(blob)
-            self.segments.append((stripe, seq, self._pos, len(blob)))
-            self._pos += len(blob)
-            self.n_records += n_records
-
-    def close_writer(self) -> None:
-        with self._lock:
-            if self._f is not None:
-                self._f.close()
-                self._f = None
-
-    # -- loader side (single thread) ----------------------------------
-    def prefetch(self) -> int:
-        """Read committed-but-unread fragments; returns bytes read now."""
-        with self._lock:
-            committed = len(self.segments)
-        done = 0
-        for i in range(committed):
-            if i in self._loaded:
-                continue
-            _, _, off, nbytes = self.segments[i]
-            if self._read_fd < 0:
-                self._read_fd = os.open(self.path, os.O_RDONLY)
-            self._loaded[i] = os.pread(self._read_fd, nbytes, off)
-            done += nbytes
-        return done
-
-    def take(self) -> tuple[bytes | None, int]:
-        """Finalize after ``close_writer``: returns (blob, fresh_bytes).
-
-        The blob holds the partition's record bytes in global input order
-        (fragments sorted by (stripe, seq)); the spill file is deleted.
-        ``fresh_bytes`` counts only bytes read by *this* call, so
-        prefetched bytes are never double-counted.
-        """
-        fresh = self.prefetch()
-        order = sorted(
-            range(len(self.segments)), key=lambda i: self.segments[i][:2]
-        )
-        if self._read_fd >= 0:
-            os.close(self._read_fd)
-            self._read_fd = -1
-        if os.path.exists(self.path):
-            os.unlink(self.path)
-        if not order:
-            return None, fresh
-        blob = b"".join(self._loaded[i] for i in order)
-        self._loaded.clear()
-        return blob, fresh
+__all__ = [
+    "PartitionSpill",
+    "PhaseClock",
+    "SortPipelineConfig",
+    "SortStats",
+    "run_pipeline",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -302,33 +100,14 @@ class SortPipelineConfig:
     # co-partitioned (aligned equi-depth partitions), which is what the
     # merge-free operators in core/operators.py consume (DESIGN.md §9).
     model: "rmi.RMIParams | None" = None
-
-
-class _Abort(Exception):
-    pass
-
-
-def _put(q: queue.Queue, item, abort: threading.Event) -> None:
-    while True:
-        try:
-            q.put(item, timeout=0.2)
-            return
-        except queue.Full:
-            if abort.is_set():
-                raise _Abort()
-
-
-def _get(q: queue.Queue, abort: threading.Event):
-    while True:
-        try:
-            return q.get(timeout=0.2)
-        except queue.Empty:
-            if abort.is_set():
-                raise _Abort()
+    # sort-executor selection (core/executor.py, DESIGN.md §10):
+    # auto -> host unless device_sort/use_kernels, then batched;
+    # host | batched | per_partition force a specific implementation.
+    executor: str = "auto"
 
 
 # ---------------------------------------------------------------------------
-# Stages
+# Train stage
 # ---------------------------------------------------------------------------
 
 
@@ -338,260 +117,6 @@ def _train_stage(sample: np.ndarray, n_leaf: int) -> rmi.RMIParams:
         # must get its own leaf for the local-frame precision to engage
         n_leaf = int(min(65536, max(1024, sample.shape[0] // 4)))
     return rmi.fit(sample, n_leaf=n_leaf)
-
-
-def _reader_worker(
-    clock: PhaseClock,
-    model: rmi.RMIParams,
-    fmt,
-    spills: list[PartitionSpill],
-    n_partitions: int,
-    stripe_q: "queue.SimpleQueue",
-    input_path: str,
-    cfg: SortPipelineConfig,
-    abort: threading.Event,
-    errors: list,
-) -> None:
-    """One reader: pull stripes, predict partitions, buffer + flush fragments.
-
-    Buffers are flushed at ``flush_bytes`` and always at stripe end, so no
-    fragment ever spans a stripe boundary — the (stripe, seq) tag stays a
-    total order over input positions.  The format supplies the blocks
-    (fixed strides, or delimiter-split lines) and the key-prefix matrix;
-    everything below the key extraction is layout-independent.
-    """
-    from repro.core import encoding
-
-    # with many partitions no single buffer may ever reach flush_bytes, so
-    # the per-reader TOTAL is also capped at a fair share of the budget —
-    # when exceeded, the largest buffer flushes (fewer, bigger fragments)
-    reader_cap = max(
-        cfg.flush_bytes,
-        cfg.memory_budget_bytes // max(4 * cfg.n_readers, 1),
-    )
-    try:
-        while not abort.is_set():
-            try:
-                stripe = stripe_q.get_nowait()
-            except queue.Empty:
-                return
-            with clock.timer("partition"):
-                # fragments are buffered as bytes (not views) so a drained
-                # batch's memory is released as soon as the batch is routed
-                bufs: dict[int, list[bytes]] = {}
-                buf_bytes: dict[int, int] = {}
-                buf_recs: dict[int, int] = {}
-                seqs: dict[int, int] = {}
-                total = 0
-
-                def flush(j: int) -> None:
-                    nonlocal total
-                    blob = b"".join(bufs.pop(j))
-                    total -= buf_bytes.pop(j)
-                    spills[j].append(
-                        stripe.index, seqs.get(j, 0), blob, buf_recs.pop(j)
-                    )
-                    seqs[j] = seqs.get(j, 0) + 1
-                    clock.add_io(written=len(blob))
-
-                for block in fmt.iter_batches(
-                    input_path, stripe, cfg.batch_records
-                ):
-                    clock.add_io(read=block.n_bytes)
-                    hi, lo = encoding.encode_np(block.keys)
-                    bucket = rmi.predict_bucket_np(model, hi, lo, n_partitions)
-                    # stable group-by-bucket, then contiguous fragment slices
-                    order = np.argsort(bucket, kind="stable")
-                    grouped = block.take(order)
-                    bcounts = np.bincount(bucket, minlength=n_partitions)
-                    starts = np.concatenate([[0], np.cumsum(bcounts)[:-1]])
-                    for j in np.nonzero(bcounts)[0]:
-                        frag = grouped.slice_bytes(
-                            starts[j], starts[j] + bcounts[j]
-                        )
-                        bufs.setdefault(j, []).append(frag)
-                        buf_bytes[j] = buf_bytes.get(j, 0) + len(frag)
-                        buf_recs[j] = buf_recs.get(j, 0) + int(bcounts[j])
-                        total += len(frag)
-                        if buf_bytes[j] >= cfg.flush_bytes:
-                            flush(j)
-                    while total >= reader_cap:
-                        flush(max(buf_bytes, key=buf_bytes.get))
-                for j in list(bufs):
-                    flush(j)
-    except _Abort:
-        pass
-    except BaseException as e:  # surfaced by the orchestrator after joins
-        errors.append(e)
-        abort.set()
-
-
-def _loader_worker(
-    clock: PhaseClock,
-    fmt,
-    spills: list[PartitionSpill],
-    offsets_box: dict,
-    partition_done: threading.Event,
-    sort_q: queue.Queue,
-    cfg: SortPipelineConfig,
-    abort: threading.Event,
-    errors: list,
-) -> None:
-    """Drain spilled fragments into memory and feed the sorter(s).
-
-    While the partition phase is in flight, eagerly pre-reads fragments
-    already committed for the next few partitions (bounded window); once
-    fragment sets are final, parses each partition's blob back into a
-    RecordBlock (the format re-derives offsets/keys) and emits partitions
-    in ascending key order.
-    """
-    try:
-        emit = 0
-        window = cfg.queue_depth + 1
-        n_parts = len(spills)
-        while emit < n_parts and not abort.is_set():
-            if partition_done.is_set():
-                with clock.timer("sort_read"):
-                    blob, fresh = spills[emit].take()
-                    clock.add_io(read=fresh)
-                    block = (
-                        fmt.parse_blob(blob) if blob is not None else None
-                    )
-                if block is not None:
-                    _put(sort_q, (offsets_box["offsets"][emit], block), abort)
-                emit += 1
-            else:
-                progressed = 0
-                for k in range(emit, min(emit + window, n_parts)):
-                    with clock.timer("sort_read") as t:
-                        got = spills[k].prefetch()
-                        clock.add_io(read=got)
-                        if not got:
-                            t.discard()  # idle poll, not sort_read work
-                    progressed += got
-                if not progressed:
-                    partition_done.wait(0.02)
-        for _ in range(cfg.n_sorters):
-            _put(sort_q, None, abort)
-    except _Abort:
-        pass
-    except BaseException as e:  # surfaced by the orchestrator after joins
-        errors.append(e)
-        abort.set()
-
-
-def _sort_partition(
-    model: rmi.RMIParams,
-    block: RecordBlock,
-    *,
-    device_sort: bool,
-    use_kernels: bool,
-) -> RecordBlock:
-    """Sort one partition's records (host LearnedSort or device path).
-
-    Only the key-prefix matrix is sorted; the permutation then gathers
-    the (possibly variable-length) record bodies in one ``take``.
-    """
-    from repro.core import learned_sort
-
-    keys = np.ascontiguousarray(block.keys)
-    if device_sort:
-        import jax.numpy as jnp
-
-        from repro.core import encoding
-        from repro.core.encoding import SENTINEL
-
-        m = block.n_records
-        hi, lo = encoding.encode_np(keys)
-        # pad to the next power of two so jit sees O(log) distinct
-        # shapes across partitions, not one compile per partition
-        m_pad = 1 << max(0, (m - 1)).bit_length()
-        if m_pad != m:
-            hi = np.concatenate([hi, np.full(m_pad - m, SENTINEL)])
-            lo = np.concatenate([lo, np.full(m_pad - m, SENTINEL)])
-        _, _, perm = learned_sort.sort_device(
-            model, jnp.asarray(hi), jnp.asarray(lo), use_kernels=use_kernels
-        )
-        perm = np.asarray(perm)
-        perm = perm[perm < m]  # drop sentinel padding
-        # touch-up beyond byte 8 (paper's strncmp step §4), over the full
-        # key window
-        k = keys[perm]
-        kv = np.ascontiguousarray(k).view(
-            [("k", f"S{k.shape[1]}")]
-        )["k"].reshape(-1)
-        if (kv[:-1] > kv[1:]).any():
-            perm = perm[np.argsort(kv, kind="stable")]
-        return block.take(perm)
-    # host LearnedSort (bucket + radix place + touch-up): no per-partition
-    # device dispatch — see learned_sort.sort_host
-    perm = learned_sort.sort_host(model, keys)
-    return block.take(perm)
-
-
-def _sorter_worker(
-    clock: PhaseClock,
-    model: rmi.RMIParams,
-    sort_q: queue.Queue,
-    write_q: queue.Queue,
-    cfg: SortPipelineConfig,
-    abort: threading.Event,
-    errors: list,
-) -> None:
-    try:
-        while True:
-            item = _get(sort_q, abort)
-            if item is None:
-                _put(write_q, None, abort)
-                return
-            offset, block = item
-            with clock.timer("sort"):
-                sorted_block = _sort_partition(
-                    model,
-                    block,
-                    device_sort=cfg.device_sort,
-                    use_kernels=cfg.use_kernels,
-                )
-            _put(write_q, (offset, sorted_block), abort)
-    except _Abort:
-        pass
-    except BaseException as e:  # surfaced by the orchestrator after joins
-        errors.append(e)
-        abort.set()
-
-
-def _writer_worker(
-    clock: PhaseClock,
-    output_path: str,
-    write_q: queue.Queue,
-    n_sorters: int,
-    abort: threading.Event,
-    errors: list,
-) -> None:
-    """Single writer: coalesced sequential write at each precomputed offset
-    (§3.5).  Offsets ride with the records, so out-of-order arrival from a
-    sorter pool is harmless — no merge, just positioned writes."""
-    try:
-        out = open(output_path, "r+b")
-        try:
-            remaining = n_sorters
-            while remaining:
-                item = _get(write_q, abort)
-                if item is None:
-                    remaining -= 1
-                    continue
-                offset, sorted_block = item
-                with clock.timer("write"):
-                    out.seek(offset)
-                    out.write(sorted_block.tobytes())
-                    clock.add_io(written=sorted_block.n_bytes)
-        finally:
-            out.close()
-    except _Abort:
-        pass
-    except BaseException as e:  # surfaced by the orchestrator after joins
-        errors.append(e)
-        abort.set()
 
 
 # ---------------------------------------------------------------------------
@@ -667,6 +192,21 @@ def run_pipeline(
             clock.add_io(read=sample.shape[0] * fmt.key_width)
             model = _train_stage(sample, cfg.n_leaf)
 
+    # --- Sort executor (the pluggable seam, DESIGN.md §10).  Batch
+    # bounds derive from the memory budget so in-flight super-batches
+    # stay within a small multiple of it.
+    executor = make_executor(
+        model,
+        device_sort=cfg.device_sort,
+        use_kernels=cfg.use_kernels,
+        executor=cfg.executor,
+        batch_bytes=cfg.memory_budget_bytes,
+        clock=clock,
+    )
+    stats.executor = executor.name
+    # a batching executor needs a single driver that owns the super-batch
+    n_sorters = cfg.n_sorters if executor.parallel_safe else 1
+
     # --- Partition / Sort / Write stages, queue-connected
     tmp = tempfile.mkdtemp(prefix="elsar_", dir=cfg.workdir)
     spills = [
@@ -687,7 +227,7 @@ def run_pipeline(
 
     readers = [
         threading.Thread(
-            target=_reader_worker,
+            target=reader_worker,
             args=(clock, model, fmt, spills, n_partitions, stripe_q,
                   input_path, cfg, abort, errors),
             name=f"elsar-reader-{i}",
@@ -696,24 +236,24 @@ def run_pipeline(
         for i in range(cfg.n_readers)
     ]
     loader = threading.Thread(
-        target=_loader_worker,
+        target=loader_worker,
         args=(clock, fmt, spills, offsets_box, partition_done, sort_q, cfg,
-              abort, errors),
+              n_sorters, abort, errors),
         name="elsar-loader",
         daemon=True,
     )
     sorters = [
         threading.Thread(
-            target=_sorter_worker,
-            args=(clock, model, sort_q, write_q, cfg, abort, errors),
+            target=sorter_worker,
+            args=(executor, sort_q, write_q, abort, errors),
             name=f"elsar-sorter-{i}",
             daemon=True,
         )
-        for i in range(cfg.n_sorters)
+        for i in range(n_sorters)
     ]
     writer = threading.Thread(
-        target=_writer_worker,
-        args=(clock, output_path, write_q, cfg.n_sorters, abort, errors),
+        target=writer_worker,
+        args=(clock, output_path, write_q, n_sorters, abort, errors),
         name="elsar-writer",
         daemon=True,
     )
@@ -748,6 +288,7 @@ def run_pipeline(
     if errors:
         raise errors[0]
     os.rmdir(tmp)
+    stats.fallbacks += executor.fallbacks
 
     if cfg.emit_manifest:
         from repro.core import manifest as manifest_lib

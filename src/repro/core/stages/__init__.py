@@ -1,0 +1,36 @@
+"""Stage modules of the pipelined ELSAR runtime (DESIGN.md §1, §10).
+
+One module per stage of the Sample→Train→Partition→Sort→Write graph,
+plus the shared plumbing:
+
+* :mod:`repro.core.stages.stats`  — ``SortStats`` / ``PhaseClock``
+* :mod:`repro.core.stages.queues` — bounded-queue put/get + ``Abort``
+* :mod:`repro.core.stages.reader` — striped reader pool + ``PartitionSpill``
+* :mod:`repro.core.stages.loader` — eager fragment drain / block parsing
+* :mod:`repro.core.stages.sorter` — queue→``SortExecutor`` stream driver
+* :mod:`repro.core.stages.writer` — positioned coalesced writes
+
+The orchestrator (``repro.core.pipeline.run_pipeline``) wires them
+together; the sort implementation itself lives behind the
+``repro.core.executor.SortExecutor`` seam.
+"""
+
+from repro.core.stages.loader import loader_worker
+from repro.core.stages.queues import Abort, get, put
+from repro.core.stages.reader import PartitionSpill, reader_worker
+from repro.core.stages.sorter import sorter_worker
+from repro.core.stages.stats import PhaseClock, SortStats
+from repro.core.stages.writer import writer_worker
+
+__all__ = [
+    "Abort",
+    "PartitionSpill",
+    "PhaseClock",
+    "SortStats",
+    "get",
+    "loader_worker",
+    "put",
+    "reader_worker",
+    "sorter_worker",
+    "writer_worker",
+]

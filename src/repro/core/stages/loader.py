@@ -1,0 +1,66 @@
+"""Load stage: drain spilled fragments into memory and feed the sorter(s).
+
+While the partition phase is in flight, eagerly pre-reads fragments
+already committed for the next few partitions (bounded window); once
+fragment sets are final, parses each partition's blob back into a
+RecordBlock (the format re-derives offsets/keys) and emits partitions in
+ascending key order.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+from repro.core.stages.queues import Abort, put
+from repro.core.stages.reader import PartitionSpill
+from repro.core.stages.stats import PhaseClock
+
+
+def loader_worker(
+    clock: PhaseClock,
+    fmt,
+    spills: list[PartitionSpill],
+    offsets_box: dict,
+    partition_done: threading.Event,
+    sort_q: queue.Queue,
+    cfg,
+    n_sorters: int,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    """Single loader thread; emits ``(write_offset, RecordBlock)`` items
+    followed by one ``None`` sentinel per sorter worker."""
+    try:
+        emit = 0
+        window = cfg.queue_depth + 1
+        n_parts = len(spills)
+        while emit < n_parts and not abort.is_set():
+            if partition_done.is_set():
+                with clock.timer("sort_read"):
+                    blob, fresh = spills[emit].take()
+                    clock.add_io(read=fresh)
+                    block = (
+                        fmt.parse_blob(blob) if blob is not None else None
+                    )
+                if block is not None:
+                    put(sort_q, (offsets_box["offsets"][emit], block), abort)
+                emit += 1
+            else:
+                progressed = 0
+                for k in range(emit, min(emit + window, n_parts)):
+                    with clock.timer("sort_read") as t:
+                        got = spills[k].prefetch()
+                        clock.add_io(read=got)
+                        if not got:
+                            t.discard()  # idle poll, not sort_read work
+                    progressed += got
+                if not progressed:
+                    partition_done.wait(0.02)
+        for _ in range(n_sorters):
+            put(sort_q, None, abort)
+    except Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()

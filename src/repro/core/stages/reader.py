@@ -1,0 +1,192 @@
+"""Partition stage: the striped reader pool and its spill files.
+
+Each reader owns contiguous stripes of the input (``fmt.file_stripes``),
+predicts partition ids with the shared RMI, and appends coalesced
+fragments to per-partition :class:`PartitionSpill` files.  Fragments are
+tagged ``(stripe, seq)`` so the loader can reconstruct exact global input
+order no matter which reader flushed first — the determinism story of
+DESIGN.md §1.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+
+import numpy as np
+
+from repro.core import rmi
+from repro.core.stages.queues import Abort
+from repro.core.stages.stats import PhaseClock
+
+
+class PartitionSpill:
+    """One partition's spill file: coalesced appends + a fragment index.
+
+    Writers (readers of the input) append pre-coalesced fragment blobs
+    under a lock, each tagged ``(stripe, seq)``.  Blobs are opaque record
+    bytes — the caller supplies the record count, so the spill layer is
+    record-format-agnostic (fixed-stride and delimiter-terminated blobs
+    spill identically).  The loader side runs in a single thread and may
+    ``prefetch()`` committed fragments *while writers are still
+    appending* — segments are recorded only after their bytes hit the
+    file, so reading a recorded segment is always safe.  ``take()``
+    finalizes: reads the rest, reorders fragments by (stripe, seq) into
+    global input order, and deletes the file.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f = None
+        self._pos = 0
+        self.n_records = 0
+        self.segments: list[tuple[int, int, int, int]] = []  # stripe, seq, off, len
+        self._loaded: dict[int, bytes] = {}  # loader-thread-only
+        self._read_fd = -1
+
+    @property
+    def n_bytes(self) -> int:
+        return self._pos
+
+    # -- writer side (reader pool) ------------------------------------
+    def append(self, stripe: int, seq: int, blob: bytes, n_records: int) -> None:
+        with self._lock:
+            if self._f is None:
+                self._f = open(self.path, "wb", buffering=0)
+            self._f.write(blob)
+            self.segments.append((stripe, seq, self._pos, len(blob)))
+            self._pos += len(blob)
+            self.n_records += n_records
+
+    def close_writer(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+    # -- loader side (single thread) ----------------------------------
+    def prefetch(self) -> int:
+        """Read committed-but-unread fragments; returns bytes read now."""
+        with self._lock:
+            committed = len(self.segments)
+        done = 0
+        for i in range(committed):
+            if i in self._loaded:
+                continue
+            _, _, off, nbytes = self.segments[i]
+            if self._read_fd < 0:
+                self._read_fd = os.open(self.path, os.O_RDONLY)
+            self._loaded[i] = os.pread(self._read_fd, nbytes, off)
+            done += nbytes
+        return done
+
+    def take(self) -> tuple[bytes | None, int]:
+        """Finalize after ``close_writer``: returns (blob, fresh_bytes).
+
+        The blob holds the partition's record bytes in global input order
+        (fragments sorted by (stripe, seq)); the spill file is deleted.
+        ``fresh_bytes`` counts only bytes read by *this* call, so
+        prefetched bytes are never double-counted.
+        """
+        fresh = self.prefetch()
+        order = sorted(
+            range(len(self.segments)), key=lambda i: self.segments[i][:2]
+        )
+        if self._read_fd >= 0:
+            os.close(self._read_fd)
+            self._read_fd = -1
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+        if not order:
+            return None, fresh
+        blob = b"".join(self._loaded[i] for i in order)
+        self._loaded.clear()
+        return blob, fresh
+
+
+def reader_worker(
+    clock: PhaseClock,
+    model: rmi.RMIParams,
+    fmt,
+    spills: list[PartitionSpill],
+    n_partitions: int,
+    stripe_q: "queue.SimpleQueue",
+    input_path: str,
+    cfg,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    """One reader: pull stripes, predict partitions, buffer + flush fragments.
+
+    Buffers are flushed at ``flush_bytes`` and always at stripe end, so no
+    fragment ever spans a stripe boundary — the (stripe, seq) tag stays a
+    total order over input positions.  The format supplies the blocks
+    (fixed strides, or delimiter-split lines) and the key-prefix matrix;
+    everything below the key extraction is layout-independent.
+    """
+    from repro.core import encoding
+
+    # with many partitions no single buffer may ever reach flush_bytes, so
+    # the per-reader TOTAL is also capped at a fair share of the budget —
+    # when exceeded, the largest buffer flushes (fewer, bigger fragments)
+    reader_cap = max(
+        cfg.flush_bytes,
+        cfg.memory_budget_bytes // max(4 * cfg.n_readers, 1),
+    )
+    try:
+        while not abort.is_set():
+            try:
+                stripe = stripe_q.get_nowait()
+            except queue.Empty:
+                return
+            with clock.timer("partition"):
+                # fragments are buffered as bytes (not views) so a drained
+                # batch's memory is released as soon as the batch is routed
+                bufs: dict[int, list[bytes]] = {}
+                buf_bytes: dict[int, int] = {}
+                buf_recs: dict[int, int] = {}
+                seqs: dict[int, int] = {}
+                total = 0
+
+                def flush(j: int) -> None:
+                    nonlocal total
+                    blob = b"".join(bufs.pop(j))
+                    total -= buf_bytes.pop(j)
+                    spills[j].append(
+                        stripe.index, seqs.get(j, 0), blob, buf_recs.pop(j)
+                    )
+                    seqs[j] = seqs.get(j, 0) + 1
+                    clock.add_io(written=len(blob))
+
+                for block in fmt.iter_batches(
+                    input_path, stripe, cfg.batch_records
+                ):
+                    clock.add_io(read=block.n_bytes)
+                    hi, lo = encoding.encode_np(block.keys)
+                    bucket = rmi.predict_bucket_np(model, hi, lo, n_partitions)
+                    # stable group-by-bucket, then contiguous fragment slices
+                    order = np.argsort(bucket, kind="stable")
+                    grouped = block.take(order)
+                    bcounts = np.bincount(bucket, minlength=n_partitions)
+                    starts = np.concatenate([[0], np.cumsum(bcounts)[:-1]])
+                    for j in np.nonzero(bcounts)[0]:
+                        frag = grouped.slice_bytes(
+                            starts[j], starts[j] + bcounts[j]
+                        )
+                        bufs.setdefault(j, []).append(frag)
+                        buf_bytes[j] = buf_bytes.get(j, 0) + len(frag)
+                        buf_recs[j] = buf_recs.get(j, 0) + int(bcounts[j])
+                        total += len(frag)
+                        if buf_bytes[j] >= cfg.flush_bytes:
+                            flush(j)
+                    while total >= reader_cap:
+                        flush(max(buf_bytes, key=buf_bytes.get))
+                for j in list(bufs):
+                    flush(j)
+    except Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()

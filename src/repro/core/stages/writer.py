@@ -1,0 +1,44 @@
+"""Write stage: positioned, coalesced sequential writes (paper §3.5)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+from repro.core.stages.queues import Abort, get
+from repro.core.stages.stats import PhaseClock
+
+
+def writer_worker(
+    clock: PhaseClock,
+    output_path: str,
+    write_q: queue.Queue,
+    n_sorters: int,
+    abort: threading.Event,
+    errors: list,
+) -> None:
+    """Single writer: coalesced sequential write at each precomputed offset
+    (§3.5).  Offsets ride with the records, so out-of-order arrival from a
+    sorter pool — or from the batched executor's pipelined epilogue — is
+    harmless: no merge, just positioned writes."""
+    try:
+        out = open(output_path, "r+b")
+        try:
+            remaining = n_sorters
+            while remaining:
+                item = get(write_q, abort)
+                if item is None:
+                    remaining -= 1
+                    continue
+                offset, sorted_block = item
+                with clock.timer("write"):
+                    out.seek(offset)
+                    out.write(sorted_block.tobytes())
+                    clock.add_io(written=sorted_block.n_bytes)
+        finally:
+            out.close()
+    except Abort:
+        pass
+    except BaseException as e:  # surfaced by the orchestrator after joins
+        errors.append(e)
+        abort.set()

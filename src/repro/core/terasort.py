@@ -30,8 +30,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import encoding, learned_sort, rmi
+from repro.core import encoding, rmi
+from repro.core.executor import make_executor
 from repro.core.external import SortStats, _Timer
+from repro.core.format import GENSORT
 from repro.data import gensort
 
 
@@ -45,6 +47,9 @@ def sort_file_distributed(
     sample_frac: float = 0.01,
     capacity_factor: float = 1.6,
     workdir: str | None = None,
+    device_sort: bool = False,
+    use_kernels: bool = False,
+    executor: str = "auto",
 ) -> SortStats:
     """Sort a record file using the pod as the partitioning engine."""
     stats = SortStats()
@@ -122,31 +127,60 @@ def sort_file_distributed(
     for f in range_files:
         f.close()
 
-    # --- final pass: sort each range once, concatenate at offsets
+    # --- final pass: sort each range once, concatenate at offsets.
+    # Ranges stream through the shared SortExecutor seam (DESIGN.md §10):
+    # the host LearnedSort by default, or the batched device-resident
+    # executor — ranges are consecutive key ranges of one model, exactly
+    # the segment contract the fused graph packs into super-batches, and
+    # its double-buffering overlaps range reads with in-flight sorts.
     sizes = [os.path.getsize(p) // gensort.RECORD_BYTES for p in range_paths]
     stats.partition_counts = sizes
     offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]) * gensort.RECORD_BYTES
     with open(output_path, "wb") as out:
         out.truncate(n * gensort.RECORD_BYTES)
+    class _StatsClock:
+        """Adapts the sequential ``_Timer`` accounting to the executor's
+        clock protocol (counters land via the executor attrs below)."""
+
+        def timer(self, phase):
+            return _Timer(stats, phase)
+
+        def add_counter(self, name, value=1):
+            pass
+
+    ex = make_executor(
+        model,
+        device_sort=device_sort,
+        use_kernels=use_kernels,
+        executor=executor,
+        clock=_StatsClock(),
+    )
+    stats.executor = ex.name
+
+    def ranges():
+        for d in range(n_dev):
+            if sizes[d] == 0:
+                os.unlink(range_paths[d])
+                continue
+            with _Timer(stats, "sort_read"):
+                blob = np.fromfile(range_paths[d], dtype=np.uint8)
+                stats.bytes_read += blob.nbytes
+                os.unlink(range_paths[d])
+            # parse_blob only needs the buffer protocol — no copy
+            yield offsets[d], GENSORT.parse_blob(blob)
+
     out = open(output_path, "r+b")
-    for d in range(n_dev):
-        if sizes[d] == 0:
-            os.unlink(range_paths[d])
-            continue
-        with _Timer(stats, "sort_read"):
-            part = np.fromfile(range_paths[d], dtype=np.uint8).reshape(
-                -1, gensort.RECORD_BYTES
-            )
-            stats.bytes_read += part.nbytes
-            os.unlink(range_paths[d])
-        with _Timer(stats, "sort"):
-            perm = learned_sort.sort_host(model, part[:, : gensort.KEY_BYTES])
-            part = part[perm]
+    for off, block in ex.sort_iter(ranges()):
         with _Timer(stats, "write"):
-            out.seek(offsets[d])
-            out.write(part.tobytes())
-            stats.bytes_written += part.nbytes
+            out.seek(off)
+            out.write(block.tobytes())
+            stats.bytes_written += block.n_bytes
     out.close()
+    stats.device_dispatches = ex.dispatches
+    if ex.batch_slots:
+        stats.batch_occupancy = ex.occupancy
+    stats.jit_compiles = ex.jit_compiles
+    stats.fallbacks += ex.fallbacks
     os.rmdir(tmp)
     return stats
 

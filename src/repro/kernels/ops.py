@@ -160,10 +160,15 @@ def sort_rows(
         lo = jnp.pad(lo, padk, constant_values=SENTINEL)
         # max-val padding loses every (key, val) tiebreak against real data
         val = jnp.pad(val, padk, constant_values=jnp.iinfo(jnp.int32).max)
+    # rows are independent, so the grid just needs r to be a block_rows
+    # multiple: pad with throwaway rows and slice them off (shrinking
+    # block_rows until it divides r degenerated to block_rows=1 — one
+    # grid step per row — whenever r was prime)
     block_rows = max(1, min(block_rows, r))
-    while r % block_rows:
-        block_rows -= 1
+    hi, _ = _pad_rows(hi, block_rows, SENTINEL)
+    lo, _ = _pad_rows(lo, block_rows, SENTINEL)
+    val, _ = _pad_rows(val, block_rows, 0)
     hi_s, lo_s, val_s = bitonic.sort_rows_pallas(
         hi, lo, val, block_rows=block_rows, interpret=_interpret()
     )
-    return hi_s[:, :c], lo_s[:, :c], val_s[:, :c]
+    return hi_s[:r, :c], lo_s[:r, :c], val_s[:r, :c]

@@ -28,3 +28,13 @@ def sort_rows_ref(
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Row-wise lexicographic sort by (hi, lo) — val is carried."""
     return jax.lax.sort((hi, lo, val), dimension=1, num_keys=2, is_stable=True)
+
+
+def segmented_sort_ref(seg, hi, lo):
+    """Stable (seg, hi, lo)-ascending permutation — the NumPy oracle for
+    kernels/fused.fused_segmented_sort (ties keep input order)."""
+    import numpy as np
+
+    return np.lexsort(
+        (np.asarray(lo), np.asarray(hi), np.asarray(seg))
+    ).astype(np.int32)

@@ -47,7 +47,10 @@ def test_histogram_kernel_sweep(n, n_buckets):
     assert int(np.asarray(h_k).sum()) == n
 
 
-@pytest.mark.parametrize("r", [1, 4, 16])
+# prime row counts (7, 13) regress the block_rows selection: shrinking
+# block_rows until it divided r degenerated to one grid step per row —
+# rows are now padded to a block multiple and sliced off instead
+@pytest.mark.parametrize("r", [1, 4, 7, 13, 16])
 @pytest.mark.parametrize("c", [2, 64, 128, 100, 257])
 @pytest.mark.parametrize("dup_range", [3, 2**32 - 1])
 def test_bitonic_kernel_sweep(r, c, dup_range):
