@@ -29,10 +29,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def smoke(n: int, json_path: str) -> None:
+def smoke(n: int, json_path: str, dist: str = "core") -> None:
     """Collect sort + query + operator + executor rates into one JSON
     artifact (``benchmarks/check_regression.py`` diffs it against the
-    committed ``BENCH_*.json`` baseline)."""
+    committed ``BENCH_*.json`` baseline).  ``dist="adversarial"``
+    additionally runs the hostile-corpus rows (DESIGN.md §11) so the
+    planner's decisions land in ``BENCH_ci.json``."""
     from benchmarks import join_rates, query_rates, sort_rates
 
     data = {
@@ -45,6 +47,8 @@ def smoke(n: int, json_path: str) -> None:
         # the per-partition dispatch baseline
         "executor": sort_rates.run_executor(n),
     }
+    if dist == "adversarial":
+        data["adversarial"] = sort_rates.run_adversarial(n)
     with open(json_path, "w") as f:
         json.dump(data, f, indent=2, default=float)
     sort_mb = max(
@@ -55,11 +59,15 @@ def smoke(n: int, json_path: str) -> None:
         r["rate_mb_s"] for r in data["ops"] if r["op"] == "join"
     )
     disp = {r["executor"]: r["dispatches"] for r in data["executor"]}
+    adv = "".join(
+        f" {r['dist']}={r['planner_decision']}"
+        for r in data.get("adversarial", ())
+    )
     print(
         f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
         f"query={qps:.0f}q/s join={join_mb:.1f}MB/s "
         f"dispatches={disp.get('batched')}/{disp.get('per_partition')} "
-        f"(batched/per-partition) -> {json_path}"
+        f"(batched/per-partition){adv} -> {json_path}"
     )
 
 
@@ -94,6 +102,13 @@ def main(argv: "list[str] | None" = None) -> None:
         metavar="PATH",
         help="bench-smoke mode: write sort+query+op rates as JSON",
     )
+    ap.add_argument(
+        "--dist",
+        choices=("core", "adversarial"),
+        default=os.environ.get("REPRO_BENCH_DIST", "core"),
+        help="corpus axis for bench-smoke: core distributions only, or "
+        "additionally the hostile planner corpora (DESIGN.md §11)",
+    )
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
     if args.format not in ("fixed", "line", "all"):
         # argparse does not validate defaults, so a typo'd
@@ -101,10 +116,12 @@ def main(argv: "list[str] | None" = None) -> None:
         ap.error(f"invalid REPRO_BENCH_FORMAT {args.format!r}")
     if args.op not in ("none", "ops", "all"):
         ap.error(f"invalid REPRO_BENCH_OP {args.op!r}")
+    if args.dist not in ("core", "adversarial"):
+        ap.error(f"invalid REPRO_BENCH_DIST {args.dist!r}")
 
     n = int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000))
     if args.json:
-        smoke(n, args.json)
+        smoke(n, args.json, dist=args.dist)
         return
     # explicit argv/args: the harness's own sys.argv must never leak into a
     # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that

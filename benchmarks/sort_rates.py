@@ -103,6 +103,47 @@ def run_line(n_records: int, budget=64 << 20) -> list[dict]:
     return rows
 
 
+def run_adversarial(n_records: int, budget=64 << 20) -> list[dict]:
+    """Hostile line corpora through the auto planner (DESIGN.md §11):
+    the rows record the planner's decision + diagnostics next to the
+    rate, so ``BENCH_ci.json`` tracks WHICH path sorted each shape, not
+    just how fast."""
+    import os
+
+    from repro.core.format import LineFormat
+    from repro.data import lines
+
+    fmt = LineFormat(max_key_bytes=16)
+    rows = []
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    for kind in ("presorted", "zipf", "allequal"):
+        path = os.path.join(
+            common.CACHE_DIR, f"adv_{kind}_{n_records}.txt"
+        )
+        if not os.path.exists(path):
+            lines.write_lines(path, n_records, kind=kind, seed=0)
+        refsum = validate.checksum_block(fmt.read_block(path))
+        with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+            stats = external.sort_file(
+                path, out.name, memory_budget_bytes=budget, fmt=fmt
+            )
+            res = validate.validate_file(
+                out.name, refsum, stats.n_records, fmt=fmt
+            )
+            assert res["ok"], (kind, res)
+            rows.append({
+                "dist": kind,
+                "rate_mb_s": stats.rate_mb_s(),
+                "seconds": stats.wall_seconds or stats.total_seconds,
+                "planner_decision": stats.planner_decision,
+                "n_partitions": len(stats.partition_counts),
+                "cardinality": stats.planner_diagnostics["cardinality"],
+                "sortedness": stats.planner_diagnostics["sortedness"],
+                "cdf_err": stats.planner_diagnostics["cdf_err"],
+            })
+    return rows
+
+
 def main_line(n_records: int = 1_000_000):
     for r in run_line(n_records):
         common.emit(

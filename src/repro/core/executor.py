@@ -379,6 +379,7 @@ def make_executor(
     executor: str = "auto",
     batch_slots: int = 0,
     batch_bytes: int = 0,
+    max_segments: int = 0,
     clock=None,
 ) -> SortExecutor:
     """Build the executor for a sort run.
@@ -403,6 +404,8 @@ def make_executor(
             kw["batch_slots"] = batch_slots
         if batch_bytes:
             kw["batch_bytes"] = batch_bytes
+        if max_segments:
+            kw["max_segments"] = min(max_segments, MAX_SEGMENTS)
         return BatchedDeviceExecutor(model, **kw)
     raise ValueError(
         f"unknown executor {executor!r} "

@@ -67,9 +67,11 @@ def sort_file(
     n_sorters: int = 1,
     manifest: bool = False,
     fmt=None,
-    flush_bytes: int = 1 << 20,
+    flush_bytes: int = 0,
     model=None,
     executor: str = "auto",
+    partitioner: str = "auto",
+    batch_segments: int = 0,
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
 
@@ -104,6 +106,21 @@ def sort_file(
     historical one-dispatch-per-partition device path;
     ``"host"``/``"batched"`` force those explicitly.  Output is
     byte-identical across executors.
+
+    ``partitioner`` selects the pre-sort planner's routing path
+    (``repro.core.planner``, DESIGN.md §11): ``"auto"`` diagnoses the
+    training sample and falls back from the learned model to
+    sample-splitter (quantile) partitioning on hostile inputs (tiny key
+    universes, duplicate floods, distributions the model can't fit);
+    ``"model"`` / ``"splitter"`` force a path.  Output is byte-identical
+    either way — the planner only changes partition *boundaries*, never
+    record order.  The decision, its reason, and the sample diagnostics
+    land in ``SortStats.planner_*``.
+
+    The knobs ``n_partitions``, ``flush_bytes`` and ``batch_segments``
+    default to 0 = auto-tuned by the planner from the memory budget and
+    the sample (``SortStats.tuned_knobs`` records the effective values);
+    any explicit non-zero value is used verbatim.
     """
     del keep_stats  # accepted for compatibility; stats are always kept
     device_sort = device_sort or use_kernels  # kernels imply device path
@@ -123,5 +140,7 @@ def sort_file(
         flush_bytes=flush_bytes,
         model=model,
         executor=executor,
+        partitioner=partitioner,
+        batch_segments=batch_segments,
     )
     return run_pipeline(input_path, output_path, cfg)

@@ -230,7 +230,11 @@ class FixedFormat:
             keys.append(run)
         out = np.concatenate(keys)
         if out.shape[0] > take:
-            out = out[rng.choice(out.shape[0], take, replace=False)]
+            # keep in-file order: the planner's sortedness/run-length
+            # diagnostics (core/planner.py) read the sample as a proxy
+            # for input order
+            sel = np.sort(rng.choice(out.shape[0], take, replace=False))
+            out = out[sel]
         return out
 
     # -- manifest serialization ---------------------------------------
@@ -463,7 +467,9 @@ class LineFormat:
             return blk.keys
         out = np.concatenate(keys)
         if out.shape[0] > take:
-            out = out[rng.choice(out.shape[0], take, replace=False)]
+            # in-file order preserved for the planner's order diagnostics
+            sel = np.sort(rng.choice(out.shape[0], take, replace=False))
+            out = out[sel]
         return out
 
     # -- manifest serialization ---------------------------------------

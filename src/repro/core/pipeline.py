@@ -1,11 +1,15 @@
 """Pipelined, parallel ELSAR runtime — the stage orchestrator
 (paper §3.2 + Fig. 6; DESIGN.md §1, §10).
 
-The runtime is five composable phase stages
+The runtime is six composable phase stages
 
-    Sample -> Train -> Partition -> Sort -> Write
+    Sample -> Train -> Plan -> Partition -> Sort -> Write
 
-connected by bounded queues.  Since PR 5 the stages live in the
+connected by bounded queues.  The Plan stage (core/planner.py,
+DESIGN.md §11) diagnoses the training sample, picks the partitioner —
+learned model or sample-splitter fallback — and auto-tunes
+``n_partitions`` / ``flush_bytes`` / ``batch_segments`` unless the
+caller pinned them.  Since PR 5 the stages live in the
 ``repro.core.stages`` package (one module per stage: ``reader``,
 ``loader``, ``sorter``, ``writer``, plus ``stats`` and ``queues``), and
 the sort implementation sits behind the pluggable
@@ -40,7 +44,7 @@ import threading
 
 import numpy as np
 
-from repro.core import rmi
+from repro.core import planner, rmi
 from repro.core.executor import make_executor, sort_partition
 from repro.core.format import GENSORT
 from repro.core.stages import (
@@ -82,14 +86,14 @@ class SortPipelineConfig:
     n_sorters: int = 1
     memory_budget_bytes: int = 256 << 20
     batch_records: int = 500_000
-    n_partitions: int = 0  # 0 -> sized from the budget
+    n_partitions: int = 0  # 0 -> auto-tuned from budget + sample
     sample_frac: float = 0.01
     n_leaf: int = 0  # 0 -> sized from the sample
     workdir: str | None = None
     use_kernels: bool = False
     device_sort: bool = False
     stripes_per_reader: int = 4  # work-stealing granularity
-    flush_bytes: int = 1 << 20  # coalesced-spill threshold per fragment
+    flush_bytes: int = 0  # spill threshold per fragment; 0 -> auto-tuned
     queue_depth: int = 2  # bound on each inter-stage queue
     # emit <output>.manifest.npz for query serving (serve/index.py)
     emit_manifest: bool = False
@@ -104,6 +108,14 @@ class SortPipelineConfig:
     # auto -> host unless device_sort/use_kernels, then batched;
     # host | batched | per_partition force a specific implementation.
     executor: str = "auto"
+    # pre-sort planner (core/planner.py, DESIGN.md §11): "auto" lets the
+    # sample diagnostics pick between the learned-model partitioner and
+    # the sample-splitter fallback; "model" | "splitter" force a path.
+    # Inert when ``model`` is pre-trained (co-partitioning must not
+    # diverge from the shared model's buckets).
+    partitioner: str = "auto"
+    # batched-executor super-batch segment cap; 0 -> auto-tuned
+    batch_segments: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +161,9 @@ def run_pipeline(
         n_est = fmt.estimate_n_records(input_path)
     stats.n_records = n_est  # exact count lands after the partition phase
 
-    # partitions sized so one partition fits comfortably in the budget
+    # budget-only partition sizing (one partition fits comfortably in the
+    # budget) — used by the empty-output early path and as the planner's
+    # starting point; the planner may clamp it by sample cardinality
     n_partitions = cfg.n_partitions
     if n_partitions == 0:
         part_bytes_target = max(cfg.memory_budget_bytes // 4, 1 << 20)
@@ -186,11 +200,50 @@ def run_pipeline(
     # model (co-partitioned multi-input sorts) skips both
     if cfg.model is not None:
         model = cfg.model
+        # co-partitioned sorts must route through the shared model with
+        # the caller's n_partitions — the planner only tunes spill/batch
+        plan = planner.preplanned(
+            model,
+            n_partitions=n_partitions,
+            file_bytes=file_bytes,
+            memory_budget_bytes=cfg.memory_budget_bytes,
+            n_readers=cfg.n_readers,
+            explicit_flush=cfg.flush_bytes,
+            explicit_segments=cfg.batch_segments,
+        )
     else:
         with clock.timer("train"):
             sample = fmt.sample_keys(input_path, n_est, cfg.sample_frac)
             clock.add_io(read=sample.shape[0] * fmt.key_width)
             model = _train_stage(sample, cfg.n_leaf)
+        # --- Plan stage (DESIGN.md §11): diagnose the sample, pick the
+        # partitioner (learned model vs sample splitter), tune the knobs
+        with clock.timer("plan"):
+            plan = planner.plan_sort(
+                sample,
+                model,
+                file_bytes=file_bytes,
+                memory_budget_bytes=cfg.memory_budget_bytes,
+                n_readers=cfg.n_readers,
+                explicit_partitions=cfg.n_partitions,
+                explicit_flush=cfg.flush_bytes,
+                explicit_segments=cfg.batch_segments,
+                planner_cfg=planner.PlannerConfig(
+                    partitioner=cfg.partitioner
+                ),
+            )
+    n_partitions = plan.knobs.n_partitions
+    stats.planner_decision = plan.decision
+    stats.planner_reason = plan.reason
+    stats.planner_diagnostics = plan.diagnostics.as_dict()
+    stats.tuned_knobs = plan.knobs.as_dict()
+    # workers see the effective (tuned or caller-pinned) knob values
+    cfg = dataclasses.replace(
+        cfg,
+        n_partitions=n_partitions,
+        flush_bytes=plan.knobs.flush_bytes,
+        batch_segments=plan.knobs.batch_segments,
+    )
 
     # --- Sort executor (the pluggable seam, DESIGN.md §10).  Batch
     # bounds derive from the memory budget so in-flight super-batches
@@ -201,6 +254,7 @@ def run_pipeline(
         use_kernels=cfg.use_kernels,
         executor=cfg.executor,
         batch_bytes=cfg.memory_budget_bytes,
+        max_segments=cfg.batch_segments,
         clock=clock,
     )
     stats.executor = executor.name
@@ -228,7 +282,7 @@ def run_pipeline(
     readers = [
         threading.Thread(
             target=reader_worker,
-            args=(clock, model, fmt, spills, n_partitions, stripe_q,
+            args=(clock, plan.partitioner, fmt, spills, stripe_q,
                   input_path, cfg, abort, errors),
             name=f"elsar-reader-{i}",
             daemon=True,

@@ -1,7 +1,8 @@
 """Partition stage: the striped reader pool and its spill files.
 
 Each reader owns contiguous stripes of the input (``fmt.file_stripes``),
-predicts partition ids with the shared RMI, and appends coalesced
+predicts partition ids with the shared partitioner (the planner's pick:
+learned RMI or sample-splitter, DESIGN.md §11), and appends coalesced
 fragments to per-partition :class:`PartitionSpill` files.  Fragments are
 tagged ``(stripe, seq)`` so the loader can reconstruct exact global input
 order no matter which reader flushed first — the determinism story of
@@ -16,7 +17,6 @@ import threading
 
 import numpy as np
 
-from repro.core import rmi
 from repro.core.stages.queues import Abort
 from repro.core.stages.stats import PhaseClock
 
@@ -108,10 +108,9 @@ class PartitionSpill:
 
 def reader_worker(
     clock: PhaseClock,
-    model: rmi.RMIParams,
+    partitioner,
     fmt,
     spills: list[PartitionSpill],
-    n_partitions: int,
     stripe_q: "queue.SimpleQueue",
     input_path: str,
     cfg,
@@ -120,14 +119,17 @@ def reader_worker(
 ) -> None:
     """One reader: pull stripes, predict partitions, buffer + flush fragments.
 
-    Buffers are flushed at ``flush_bytes`` and always at stripe end, so no
-    fragment ever spans a stripe boundary — the (stripe, seq) tag stays a
-    total order over input positions.  The format supplies the blocks
-    (fixed strides, or delimiter-split lines) and the key-prefix matrix;
-    everything below the key extraction is layout-independent.
+    ``partitioner`` is the planner's pick — learned model or sample
+    splitter — behind the shared ``bucket_np(keys) -> int32 ids``
+    surface; everything downstream of the bucket ids is identical for
+    both.  Buffers are flushed at ``flush_bytes`` and always at stripe
+    end, so no fragment ever spans a stripe boundary — the (stripe, seq)
+    tag stays a total order over input positions.  The format supplies
+    the blocks (fixed strides, or delimiter-split lines) and the
+    key-prefix matrix; everything below the key extraction is
+    layout-independent.
     """
-    from repro.core import encoding
-
+    n_partitions = len(spills)
     # with many partitions no single buffer may ever reach flush_bytes, so
     # the per-reader TOTAL is also capped at a fair share of the budget —
     # when exceeded, the largest buffer flushes (fewer, bigger fragments)
@@ -164,8 +166,7 @@ def reader_worker(
                     input_path, stripe, cfg.batch_records
                 ):
                     clock.add_io(read=block.n_bytes)
-                    hi, lo = encoding.encode_np(block.keys)
-                    bucket = rmi.predict_bucket_np(model, hi, lo, n_partitions)
+                    bucket = partitioner.bucket_np(block.keys)
                     # stable group-by-bucket, then contiguous fragment slices
                     order = np.argsort(bucket, kind="stable")
                     grouped = block.take(order)

@@ -53,6 +53,13 @@ class SortStats:
     device_dispatches: int = 0
     batch_occupancy: float = 0.0
     jit_compiles: int = 0
+    # pre-sort planner record (DESIGN.md §11): which partitioner ran,
+    # why, the sample diagnostics behind the choice, and the knobs the
+    # auto-tuner settled on — so tests/benchmarks assert the *decision*
+    planner_decision: str = ""
+    planner_reason: str = ""
+    planner_diagnostics: dict = dataclasses.field(default_factory=dict)
+    tuned_knobs: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_seconds(self) -> float:

@@ -9,6 +9,12 @@ Records are 100 bytes: a 10-byte printable-ASCII key + 90-byte payload
   entries; record ``rec_idx`` has its 6 most-significant key bytes replaced
   by ``table[floor(log2(rec_idx)) mod 128]``, producing the "spikes"
   histogram of paper Fig. 3.
+
+``adversarial_keys``/``make_adversarial_records`` are the fixed-format
+twins of the hostile line corpora (``data/lines.ADVERSARIAL_KINDS``,
+DESIGN.md §11): presorted / reverse / zipf / allequal / tiny 10-digit
+decimal keys over the gensort stride, for the planner's differential
+grid.
 """
 
 from __future__ import annotations
@@ -48,6 +54,77 @@ def skewed_keys(n: int, seed: int = 0, start_idx: int = 0) -> np.ndarray:
     table_idx = (np.floor(np.log2(rec_idx)).astype(np.int64)) % SKEW_TABLE_SIZE
     keys[:, :SKEW_TABLE_BYTES] = table[table_idx]
     return keys
+
+
+ADVERSARIAL_KINDS = ("presorted", "reverse", "zipf", "allequal", "tiny")
+_ZIPF_A = 1.4
+_ZIPF_SPACE = 1_000_000
+_TINY_SPACE = 5
+# injective mod 10**width (odd, not divisible by 5) — same spreading
+# trick as the keyed line corpora (data/lines._SCRAMBLE)
+_KEY_SCRAMBLE = 99_999_989
+
+
+def adversarial_keys(
+    n: int, kind: str, seed: int = 0, start_idx: int = 0
+) -> np.ndarray:
+    """(n, 10) hostile decimal keys; ``start_idx`` keeps presorted /
+    reverse globally monotone across ``write_file``-style chunks."""
+    from repro.core.encoding import ascii_digits
+
+    if kind not in ADVERSARIAL_KINDS:
+        raise ValueError(
+            f"unknown adversarial kind {kind!r}; one of {ADVERSARIAL_KINDS}"
+        )
+    rng = _rng(seed)
+    if kind == "presorted":
+        vals = np.arange(start_idx, start_idx + n, dtype=np.int64)
+    elif kind == "reverse":
+        vals = 10**KEY_BYTES - 1 - np.arange(
+            start_idx, start_idx + n, dtype=np.int64
+        )
+    elif kind == "zipf":
+        ranks = np.minimum(
+            rng.zipf(_ZIPF_A, size=n).astype(np.int64), _ZIPF_SPACE
+        )
+        vals = (ranks * _KEY_SCRAMBLE) % (10**KEY_BYTES)
+    elif kind == "allequal":
+        vals = np.full(n, 4_242_424_242, dtype=np.int64)
+    else:  # tiny
+        kidx = rng.integers(0, _TINY_SPACE, size=n).astype(np.int64)
+        vals = (kidx * _KEY_SCRAMBLE) % (10**KEY_BYTES)
+    return ascii_digits(vals, KEY_BYTES)
+
+
+def make_adversarial_records(
+    n: int, kind: str, *, seed: int = 0, start_idx: int = 0
+) -> np.ndarray:
+    """Fixed-layout hostile records: adversarial key + the standard
+    id-tagged payload (validators still detect loss/duplication)."""
+    rec = make_records(n, seed=seed, start_idx=start_idx)
+    rec[:, :KEY_BYTES] = adversarial_keys(n, kind, seed, start_idx)
+    return rec
+
+
+def write_adversarial_file(
+    path: str,
+    n: int,
+    kind: str,
+    *,
+    seed: int = 0,
+    chunk: int = 1_000_000,
+) -> None:
+    """Stream ``n`` hostile records to ``path`` (chunked)."""
+    with open(path, "wb") as f:
+        done = 0
+        while done < n:
+            m = min(chunk, n - done)
+            f.write(
+                make_adversarial_records(
+                    m, kind, seed=seed + done, start_idx=done
+                ).tobytes()
+            )
+            done += m
 
 
 def make_records(

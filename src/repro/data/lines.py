@@ -17,6 +17,24 @@ harness sweeps (tests/test_differential.py):
 * ``empty``       — ~30% zero-length lines (bare delimiters) mixed with
   uniform lines.
 
+**Adversarial shapes** (DESIGN.md §11) target exactly the inputs where a
+learned CDF degrades and the planner's sample-splitter fallback must
+engage — or provably must NOT:
+
+* ``presorted``   — globally ascending 12-digit decimal keys + random
+  printable pad: already sorted input (sortedness ~1.0),
+* ``reverse``     — the same keys descending: worst-case input order,
+* ``zipf``        — TRUE Zipfian key ranks (``rng.zipf``, the "dups"
+  kind's squared-uniform pick undersells the tail by orders of
+  magnitude): a huge duplicate spike the model cannot split,
+* ``allequal``    — every line shares one 16-byte prefix (= the default
+  differential key window): key cardinality 1, pure tie-stability,
+* ``tiny``        — a 5-key universe: more partitions than distinct keys
+  are guaranteed empty,
+* ``utf8``        — lines of 2-byte UTF-8 sequences (lead ``0xC2-0xDF``,
+  continuation ``0x80-0xBF``): non-ASCII high bytes through the whole
+  memcmp path (never collides with the ``\\n`` delimiter).
+
 All generation is vectorized (no per-line Python loop) and a pure
 function of ``(kind, n, seed)``; ``write_lines`` streams chunks so
 corpora larger than memory are fine, and ``terminate_last=False`` drops
@@ -46,10 +64,24 @@ from repro.data.gensort import (
     skew_table,
 )
 
-KINDS = ("uniform", "skewed", "dups", "short", "empty")
+ADVERSARIAL_KINDS = (
+    "presorted", "reverse", "zipf", "allequal", "tiny", "utf8",
+)
+KINDS = ("uniform", "skewed", "dups", "short", "empty") + ADVERSARIAL_KINDS
 
 _DELIM = 10  # b"\n"; the printable range [32, 126] never collides
 _VOCAB = 64  # distinct lines in the duplicate-heavy corpus
+_IDX_DIGITS = 12  # decimal width of presorted/reverse keys
+# zipf/tiny keys fill the differential harness's whole 16-byte key
+# window: their duplicate structure must survive the key-window cut
+# (12 digits + in-window random pad would fake distinct keys)
+_DUP_DIGITS = 16
+_ZIPF_A = 1.4  # true-Zipf exponent: ~half the mass on the top few ranks
+_ZIPF_SPACE = 1_000_000  # zipf rank universe (clip bound)
+_TINY_SPACE = 5  # distinct keys in the tiny-universe corpus
+# one shared 16-byte prefix = the differential harness's key window, so
+# every "allequal" key is identical under LineFormat(max_key_bytes=16)
+_ALLEQUAL_PREFIX = np.frombuffer(b"same-key-prefix!", dtype=np.uint8)
 
 
 def _rng(seed: int) -> np.random.Generator:
@@ -60,10 +92,53 @@ def _assemble(lengths: np.ndarray, rng: np.random.Generator) -> np.ndarray:
     """Pack ``n`` lines of the given *content* lengths (delimiter added)
     into one uint8 buffer of random printable content."""
     lengths = lengths.astype(np.int64)
+    if lengths.size == 0:  # empty corpus: a valid zero-line buffer
+        return np.empty(0, np.uint8)
     ends = np.cumsum(lengths + 1)
     data = rng.integers(
         ASCII_LO, ASCII_HI + 1, size=int(ends[-1]), dtype=np.uint8
     )
+    data[ends - 1] = _DELIM
+    return data
+
+
+def _numbered_lines(
+    values: np.ndarray,
+    rng: np.random.Generator,
+    pad_max: int,
+    width: int = _IDX_DIGITS,
+) -> np.ndarray:
+    """Lines ``<width-digit decimal><random pad>\\n`` for the given key
+    values (vectorized; the decimal field decides memcmp order)."""
+    from repro.core.encoding import ascii_digits
+
+    n = values.shape[0]
+    pads = rng.integers(0, pad_max + 1, size=n).astype(np.int64)
+    data = _assemble(width + pads, rng)
+    if n == 0:
+        return data
+    starts = np.concatenate(
+        [[0], np.cumsum(width + pads + 1)[:-1]]
+    ).astype(np.int64)
+    data[starts[:, None] + np.arange(width)] = ascii_digits(values, width)
+    return data
+
+
+def _utf8_lines(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Lines of 1..12 two-byte UTF-8 characters: lead ``0xC2-0xDF``,
+    continuation ``0x80-0xBF`` — always valid UTF-8, never ``\\n``."""
+    if n == 0:
+        return np.empty(0, np.uint8)
+    chars = rng.integers(1, 13, size=n).astype(np.int64)
+    total = int(chars.sum())
+    content = np.empty(2 * total, dtype=np.uint8)
+    content[0::2] = rng.integers(0xC2, 0xE0, size=total, dtype=np.uint8)
+    content[1::2] = rng.integers(0x80, 0xC0, size=total, dtype=np.uint8)
+    ends = np.cumsum(2 * chars + 1)
+    data = np.empty(int(ends[-1]), dtype=np.uint8)
+    mask = np.ones(data.shape[0], dtype=bool)
+    mask[ends - 1] = False
+    data[mask] = content
     data[ends - 1] = _DELIM
     return data
 
@@ -77,10 +152,46 @@ def make_lines(
     max_len: int = 32,
 ) -> np.ndarray:
     """One corpus chunk as a uint8 buffer of ``n`` delimiter-terminated
-    lines.  ``start_idx`` keeps the skew schedule global across chunks."""
+    lines.  ``start_idx`` keeps the skew/key schedule global across
+    chunks (presorted/reverse stay globally monotone however the corpus
+    is chunked)."""
     if kind not in KINDS:
         raise ValueError(f"unknown line-corpus kind {kind!r}; one of {KINDS}")
     rng = _rng(seed)
+    pad_max = max(max_len - _IDX_DIGITS, 0)
+    if kind in ("presorted", "reverse"):
+        idx = np.arange(start_idx, start_idx + n, dtype=np.int64)
+        if kind == "reverse":
+            idx = 10**_IDX_DIGITS - 1 - idx
+        return _numbered_lines(idx, rng, pad_max=pad_max)
+    if kind == "zipf":
+        # TRUE Zipf ranks (heavy tail), spread over the digit range by
+        # the injective scramble so the spike isn't also a prefix cluster
+        ranks = np.minimum(
+            rng.zipf(_ZIPF_A, size=n).astype(np.int64), _ZIPF_SPACE
+        )
+        return _numbered_lines(
+            _render_keys(ranks, _DUP_DIGITS), rng,
+            max(max_len - _DUP_DIGITS, 0), width=_DUP_DIGITS,
+        )
+    if kind == "tiny":
+        kidx = rng.integers(0, _TINY_SPACE, size=n).astype(np.int64)
+        return _numbered_lines(
+            _render_keys(kidx, _DUP_DIGITS), rng,
+            max(max_len - _DUP_DIGITS, 0), width=_DUP_DIGITS,
+        )
+    if kind == "allequal":
+        w = _ALLEQUAL_PREFIX.shape[0]
+        pads = rng.integers(0, max(max_len - w, 0) + 1, size=n)
+        data = _assemble(w + pads.astype(np.int64), rng)
+        if n:
+            starts = np.concatenate(
+                [[0], np.cumsum(w + pads + 1)[:-1]]
+            ).astype(np.int64)
+            data[starts[:, None] + np.arange(w)] = _ALLEQUAL_PREFIX
+        return data
+    if kind == "utf8":
+        return _utf8_lines(n, rng)
     if kind == "dups":
         vocab_len = _rng(seed ^ 0x5EED).integers(
             min_len, max_len + 1, size=_VOCAB
@@ -162,6 +273,8 @@ _SCRAMBLE = 99_999_989
 
 
 def _render_keys(kidx: np.ndarray, width: int) -> np.ndarray:
+    if kidx.size == 0:
+        return kidx.astype(np.int64)
     mx = int(kidx.max())
     if mx >= 10**width:
         raise ValueError(f"key universe exceeds {width} decimal digits")

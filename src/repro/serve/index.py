@@ -76,6 +76,14 @@ class SortedFileIndex:
         # calls _bound from worker threads, so increments take a lock
         self.band_hits = 0
         self.fallbacks = 0
+        # observed last-mile distances: max(pred - answer) and
+        # max(answer - pred) over every bound served.  The manifest's
+        # (err_lo, err_hi) claims to bound these; tests on adversarial
+        # corpora assert observed_err_* never exceeds the band — a
+        # silent band underestimation shows up here, not as a wrong
+        # answer (the fallback keeps correctness).
+        self.observed_err_lo = 0
+        self.observed_err_hi = 0
         self._stat_lock = threading.Lock()
 
     @classmethod
@@ -197,9 +205,13 @@ class SortedFileIndex:
         if r is None:
             with self._stat_lock:
                 self.fallbacks += 1
-            return self._fallback(q, side)
+            r = self._fallback(q, side)
+        else:
+            with self._stat_lock:
+                self.band_hits += 1
         with self._stat_lock:
-            self.band_hits += 1
+            self.observed_err_lo = max(self.observed_err_lo, pred - r)
+            self.observed_err_hi = max(self.observed_err_hi, r - pred)
         return r
 
     def lower_bound(self, key: bytes, pred: int | None = None) -> int:

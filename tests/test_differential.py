@@ -250,3 +250,221 @@ def test_v1_manifest_back_compat(tmp_path):
     assert bool(found[0])
     kv = validate.keys_view(recs)
     assert kv[int(rows[0])] == kv[1234]  # first row with the queried key
+
+
+# ---------------------------------------------------------------------------
+# Adversarial grid (DESIGN.md §11): hostile corpora through the planner
+# ---------------------------------------------------------------------------
+
+# shapes with twins in BOTH formats (lines.ADVERSARIAL_KINDS additionally
+# has the line-only "utf8", covered separately below)
+ADV_SHAPES = ("presorted", "reverse", "zipf", "allequal", "tiny")
+N_ADV_FIXED = max(2_000, SCALE_BYTES // gensort.RECORD_BYTES)
+N_ADV_LINE = max(4_000, SCALE_BYTES // 20)
+
+
+def _adv_corpus(workdir, fmt_kind: str, shape: str):
+    """(input_path, oracle_bytes, n, fmt, refsum) for a hostile corpus;
+    cached across the sweep like ``_corpus``."""
+    ck = ("adv", fmt_kind, shape)
+    if ck in _CACHE:
+        return _CACHE[ck]
+    if fmt_kind == "fixed":
+        fmt = FixedFormat(gensort.RECORD_BYTES, gensort.KEY_BYTES)
+        path = str(workdir / f"adv_fixed_{shape}.bin")
+        gensort.write_adversarial_file(path, N_ADV_FIXED, shape, seed=13)
+        oracle = _fixed_oracle(path)
+        n = N_ADV_FIXED
+    else:
+        fmt = LineFormat(max_key_bytes=K)
+        path = str(workdir / f"adv_line_{shape}.txt")
+        lines.write_lines(path, N_ADV_LINE, kind=shape, seed=13)
+        oracle = _line_oracle(open(path, "rb").read(), K)
+        n = N_ADV_LINE
+    refsum = validate.checksum_block(fmt.read_block(path))
+    _CACHE[ck] = (path, oracle, n, fmt, refsum)
+    return _CACHE[ck]
+
+
+@pytest.mark.parametrize("spill", sorted(SPILLS))
+@pytest.mark.parametrize("n_readers", READERS)
+@pytest.mark.parametrize("shape", ADV_SHAPES)
+@pytest.mark.parametrize("fmt_kind", ["fixed", "line"])
+def test_adversarial_differential(
+    workdir, tmp_path, fmt_kind, shape, n_readers, spill
+):
+    """Hostile corpora stay byte-identical to the oracle under the auto
+    planner, at every reader count and spill pressure, and the stats
+    record which path ran and why."""
+    inp, oracle, n, fmt, refsum = _adv_corpus(workdir, fmt_kind, shape)
+    out = str(tmp_path / "out.bin")
+    stats = external.sort_file(
+        inp, out,
+        memory_budget_bytes=BUDGET,
+        n_readers=n_readers,
+        fmt=fmt,
+        **SPILLS[spill],
+    )
+    got = open(out, "rb").read()
+    assert _sha(got) == _sha(oracle), (
+        f"adversarial {fmt_kind}/{shape} r={n_readers} {spill}: output "
+        f"differs from sorted() oracle ({len(got)} vs {len(oracle)} bytes)"
+    )
+    assert stats.n_records == n
+    res = validate.validate_file(out, refsum, n, fmt=fmt)
+    assert res["ok"], res
+    # the planner always leaves a full decision record
+    assert stats.planner_decision in ("model", "splitter")
+    assert stats.planner_reason
+    assert stats.planner_diagnostics["n_sample"] > 0
+    assert stats.tuned_knobs["n_partitions"] == len(stats.partition_counts)
+
+
+@pytest.mark.parametrize("partitioner", ["model", "splitter"])
+@pytest.mark.parametrize("shape", ADV_SHAPES)
+@pytest.mark.parametrize("fmt_kind", ["fixed", "line"])
+def test_adversarial_both_planner_paths(
+    workdir, tmp_path, fmt_kind, shape, partitioner
+):
+    """Every hostile corpus × both formats is byte-identical to the
+    oracle under BOTH forced planner decisions — the fallback is a
+    partitioning strategy, never a correctness fork."""
+    inp, oracle, n, fmt, refsum = _adv_corpus(workdir, fmt_kind, shape)
+    out = str(tmp_path / "out.bin")
+    stats = external.sort_file(
+        inp, out,
+        memory_budget_bytes=BUDGET,
+        fmt=fmt,
+        partitioner=partitioner,
+    )
+    assert stats.planner_decision == partitioner
+    assert "forced" in stats.planner_reason
+    got = open(out, "rb").read()
+    assert _sha(got) == _sha(oracle), (
+        f"{fmt_kind}/{shape} forced {partitioner}: differs from oracle"
+    )
+    assert validate.validate_file(out, refsum, n, fmt=fmt)["ok"]
+
+
+@pytest.mark.parametrize("fmt_kind", ["fixed", "line"])
+def test_adversarial_planner_decisions(workdir, tmp_path, fmt_kind):
+    """The auto planner's decision + diagnostics per corpus shape: the
+    splitter MUST engage on degenerate universes (allequal/tiny) and the
+    true-Zipf flood; the model MUST survive uniform data; the order
+    diagnostics must expose presorted/reverse inputs."""
+    def run(shape, adv=True):
+        src = _adv_corpus if adv else _corpus
+        inp, _, _, fmt, _ = src(workdir, fmt_kind, shape)
+        out = str(tmp_path / f"{fmt_kind}_{shape}.out")
+        return external.sort_file(
+            inp, out, memory_budget_bytes=BUDGET, fmt=fmt
+        )
+
+    for shape in ("allequal", "tiny", "zipf"):
+        s = run(shape)
+        assert s.planner_decision == "splitter", (
+            fmt_kind, shape, s.planner_reason
+        )
+    s = run("allequal")
+    assert s.planner_diagnostics["cardinality"] == 1
+    assert s.planner_diagnostics["dup_ratio"] > 0.99
+    s = run("tiny")
+    assert 1 <= s.planner_diagnostics["cardinality"] <= 5
+    s = run("presorted")
+    assert s.planner_diagnostics["sortedness"] > 0.9
+    assert s.planner_diagnostics["mean_run_length"] > 10
+    s = run("reverse")
+    assert s.planner_diagnostics["sortedness"] < 0.1
+    # uniform input must keep the learned-model path (the whole point of
+    # the hybrid: fall back only when the diagnostics demand it)
+    s = run("uniform", adv=False)
+    assert s.planner_decision == "model", s.planner_reason
+    assert s.planner_diagnostics["cdf_err"] < 0.1
+
+
+def test_adversarial_utf8_lines(workdir, tmp_path):
+    """Multi-byte UTF-8 lines (line-only shape): high non-ASCII bytes
+    through the full memcmp path, byte-identical at r=3."""
+    fmt = LineFormat(max_key_bytes=K)
+    inp = str(workdir / "adv_line_utf8.txt")
+    lines.write_lines(inp, N_ADV_LINE, kind="utf8", seed=13)
+    oracle = _line_oracle(open(inp, "rb").read(), K)
+    out = str(tmp_path / "out.txt")
+    stats = external.sort_file(
+        inp, out, memory_budget_bytes=BUDGET, n_readers=3, fmt=fmt
+    )
+    assert _sha(open(out, "rb").read()) == _sha(oracle)
+    # random 2-byte UTF-8 keys are uniform in the encoder window: the
+    # model path must survive them
+    assert stats.planner_decision == "model", stats.planner_reason
+
+
+@pytest.mark.parametrize("fmt_kind", ["fixed", "line"])
+def test_adversarial_composite_two_column_keys(tmp_path, fmt_kind):
+    """Composite keys via the keyed/payload machinery (DESIGN.md §9): a
+    key window spanning BOTH decimal columns sorts by (key, value) — a
+    tiny first column forces column 2 to decide nearly every tie."""
+    n = max(3_000, SCALE_BYTES // 40)
+    if fmt_kind == "fixed":
+        # window = 10-byte key column + 8-byte value column
+        fmt = FixedFormat(gensort.RECORD_BYTES, 18)
+        inp = str(tmp_path / "in.bin")
+        lines.write_keyed_records(inp, n, key_space=17, seed=21)
+        oracle = _fixed_composite_oracle(inp, 18)
+    else:
+        fmt = LineFormat(max_key_bytes=20)  # 12-digit key + 8-digit value
+        inp = str(tmp_path / "in.txt")
+        lines.write_keyed_lines(inp, n, key_space=17, seed=21)
+        oracle = _line_oracle(open(inp, "rb").read(), 20)
+    out = str(tmp_path / "out.bin")
+    stats = external.sort_file(
+        inp, out, memory_budget_bytes=BUDGET, n_readers=3, fmt=fmt
+    )
+    assert _sha(open(out, "rb").read()) == _sha(oracle)
+    assert stats.n_records == n
+
+
+def _fixed_composite_oracle(path: str, key_bytes: int) -> bytes:
+    recs = gensort.read_records(path, mmap=False)
+    kv = (
+        np.ascontiguousarray(recs[:, :key_bytes])
+        .view([("k", f"S{key_bytes}")])["k"]
+        .reshape(-1)
+    )
+    return recs[np.argsort(kv, kind="stable")].tobytes()
+
+
+@pytest.mark.parametrize("shape", ADV_SHAPES)
+def test_adversarial_manifest_band_is_true_bound(workdir, tmp_path, shape):
+    """On every hostile corpus the manifest's error band bounds the
+    observed last-mile distance in serving — a silently underestimated
+    band on skewed/duplicate inputs would show up here."""
+    from repro.core import manifest as manifest_lib
+    from repro.serve.index import SortedFileIndex
+
+    inp, _, n, fmt, _ = _adv_corpus(workdir, "fixed", shape)
+    out = str(tmp_path / "out.bin")
+    external.sort_file(
+        inp, out, memory_budget_bytes=BUDGET, manifest=True
+    )
+    m = manifest_lib.load(manifest_lib.manifest_path(out))
+    index = SortedFileIndex(out, m)
+    recs = gensort.read_records(out, mmap=False)
+    rng = np.random.default_rng(7)
+    pick = np.unique(rng.integers(0, n, size=min(n, 500)))
+    rows, found = index.lookup(recs[pick, : gensort.KEY_BYTES])
+    assert found.all()
+    kv = validate.keys_view(recs)
+    for i, r in zip(pick, rows):
+        assert kv[int(r)] == kv[int(i)]  # correct (leftmost) match
+    # the band claim: every observed |prediction - answer| within it
+    assert index.observed_err_lo <= m.err_lo, (
+        f"{shape}: observed backward distance {index.observed_err_lo} "
+        f"exceeds the manifest band err_lo={m.err_lo}"
+    )
+    assert index.observed_err_hi <= m.err_hi, (
+        f"{shape}: observed forward distance {index.observed_err_hi} "
+        f"exceeds the manifest band err_hi={m.err_hi}"
+    )
+    # present-key lower bounds inside a true band never need the fallback
+    assert index.fallbacks == 0

@@ -211,3 +211,64 @@ def test_line_keys_of_empty_and_short_lines():
     assert bytes(k[0]) == b"\x00\x00\x00\x00"  # empty line
     assert bytes(k[1]) == b"ab\x00\x00"  # short line, zero-padded
     assert bytes(k[2]) == b"abcd"  # truncated to the window
+
+
+# ---------------------------------------------------------------------------
+# make_lines edge cases (DESIGN.md §11 hardening)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", lines.KINDS)
+def test_make_lines_empty_corpus(kind, tmp_path):
+    """n=0 must yield a valid zero-line buffer for every kind — and the
+    whole sort path must accept the resulting empty file."""
+    assert lines.make_lines(0, kind).size == 0
+    p = str(tmp_path / "e.txt")
+    lines.write_lines(p, 0, kind=kind)
+    assert os.path.getsize(p) == 0
+    fmt = LineFormat(max_key_bytes=8)
+    block = fmt.read_block(p)
+    assert block.n_records == 0 and block.keys.shape == (0, 8)
+
+
+def test_key_width_exceeding_longest_line(tmp_path):
+    """A key window wider than any line must produce valid zero-padded
+    keys and offsets (no degenerate windows), for every corpus kind."""
+    fmt = LineFormat(max_key_bytes=64)  # wider than any 32-byte line
+    for kind in lines.KINDS:
+        p = str(tmp_path / f"{kind}.txt")
+        lines.write_lines(p, 300, kind=kind, seed=7)
+        block = fmt.read_block(p)
+        assert block.keys.shape == (block.n_records, 64)
+        assert int(block.offsets[-1]) == os.path.getsize(p)
+        # zero padding beyond each line's content, content bytes intact
+        for i in (0, block.n_records // 2, block.n_records - 1):
+            raw = block.record(i)[:-1]  # strip delimiter
+            want = raw[:64].ljust(64, b"\x00")
+            assert bytes(block.keys[i]) == want
+        # the sample path survives the wide window too
+        sk = fmt.sample_keys(p, block.n_records, 0.5)
+        assert sk.shape[1] == 64
+
+
+@pytest.mark.parametrize("kind", lines.ADVERSARIAL_KINDS)
+def test_adversarial_lines_well_formed(kind):
+    """Adversarial corpora: n lines out, delimiter-terminated, and the
+    per-kind key structure holds."""
+    buf = lines.make_lines(400, kind, seed=3)
+    ls = bytes(buf).split(b"\n")
+    assert ls[-1] == b""
+    ls = ls[:-1]
+    assert len(ls) == 400
+    if kind == "presorted":
+        assert ls == sorted(ls)
+    elif kind == "reverse":
+        keys = [l[:12] for l in ls]
+        assert keys == sorted(keys, reverse=True)
+    elif kind == "allequal":
+        assert len({l[:16] for l in ls}) == 1
+    elif kind == "tiny":
+        assert len({l[:16] for l in ls}) <= 5
+    elif kind == "utf8":
+        for l in ls:
+            l.decode("utf-8")  # always valid 2-byte sequences

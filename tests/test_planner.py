@@ -1,0 +1,260 @@
+"""Property tests for the pre-sort planner (core/planner.py, DESIGN.md
+§11): diagnostics are permutation-stable where they should be (and
+order-sensitive where they shouldn't), sample-splitter partitions are
+mutually exclusive / monotone / equi-depth within bound, and the
+auto-tuned knobs always land in valid ranges."""
+
+import numpy as np
+
+from repro.core import planner, rmi
+from repro.core.partition import partition_size_stats
+from repro.testing.hypothesis_compat import given, settings, st
+
+K = 10  # key width used throughout (gensort's)
+
+
+def _keys(vals, width=K) -> np.ndarray:
+    """(n, width) u8 keys from u64-ish ints (big-endian byte spread so
+    memcmp order == numeric order)."""
+    v = np.asarray(vals, dtype=np.uint64)
+    out = np.zeros((v.shape[0], width), dtype=np.uint8)
+    for b in range(min(8, width)):
+        out[:, b] = (v >> np.uint64(8 * (7 - b))).astype(np.uint8)
+    return out
+
+
+def _fit(keys: np.ndarray) -> rmi.RMIParams:
+    return rmi.fit(keys, n_leaf=32)
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**40), min_size=8, max_size=300),
+    st.integers(0, 1000),
+)
+def test_diagnostics_permutation_stable(vals, seed):
+    """dup_ratio / cardinality / cdf_err do not depend on sample order."""
+    keys = _keys(vals)
+    model = _fit(keys)
+    a = planner.diagnose(keys, model)
+    perm = np.random.default_rng(seed).permutation(keys.shape[0])
+    b = planner.diagnose(keys[perm], model)
+    assert a.dup_ratio == b.dup_ratio
+    assert a.cardinality == b.cardinality
+    assert a.cdf_err == b.cdf_err
+    assert a.n_sample == b.n_sample
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**40), min_size=8, max_size=300))
+def test_diagnostics_order_sensitivity(vals):
+    """sortedness reads the sample in the order given: 1.0 on the sorted
+    sample, ~0 on the strictly-descending one."""
+    keys = _keys(sorted(vals))
+    d = planner.diagnose(keys)
+    assert d.sortedness == 1.0
+    assert d.mean_run_length == keys.shape[0]
+    distinct = sorted(set(vals))
+    if len(distinct) >= 2:
+        rev = _keys(distinct[::-1])
+        dr = planner.diagnose(rev)
+        assert dr.sortedness == 0.0
+        assert dr.mean_run_length <= 1.0 + 1e-9
+    # bounds hold everywhere
+    assert 0.0 <= d.dup_ratio < 1.0
+    assert 1 <= d.cardinality <= keys.shape[0]
+
+
+def test_diagnose_empty_sample():
+    d = planner.diagnose(np.empty((0, K), dtype=np.uint8))
+    assert d.n_sample == 0 and d.cardinality == 0
+
+
+# ---------------------------------------------------------------------------
+# Sample-splitter partitions
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**40), min_size=4, max_size=400),
+    st.integers(2, 48),
+)
+def test_splitter_monotone_and_exclusive(vals, n_partitions):
+    """Every key lands in exactly one bucket; buckets are monotone in
+    memcmp key order; boundaries are strictly increasing."""
+    sample = _keys(vals)
+    bounds = planner.splitter_boundaries(sample, n_partitions)
+    part = planner.SplitterPartitioner(bounds)
+    assert 1 <= part.n_partitions <= n_partitions
+    if bounds.shape[0] > 1:
+        bv = bounds.view([("k", f"S{K}")])["k"].reshape(-1)
+        assert (bv[1:] > bv[:-1]).all()  # dedup => strictly increasing
+    srt = _keys(sorted(vals))
+    b = part.bucket_np(srt)
+    assert b.min() >= 0 and b.max() < part.n_partitions
+    assert (np.diff(b) >= 0).all()  # monotone: sorted keys, sorted buckets
+    # exclusivity: equal keys always map to the same bucket
+    sview = srt.view([("k", f"S{K}")])["k"].reshape(-1)
+    for kbytes in np.unique(sview)[:20]:
+        same = b[sview == kbytes]
+        assert (same == same[0]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 32), st.integers(64, 500))
+def test_splitter_equidepth_within_bound(seed, n_partitions, n):
+    """On distinct keys the splitter's own sample partitions are
+    equi-depth within the 2x bound (quantile ranks differ by at most
+    ceil vs floor of n / P)."""
+    rng = np.random.default_rng(seed)
+    vals = rng.choice(2**40, size=n, replace=False)
+    sample = _keys(vals)
+    bounds = planner.splitter_boundaries(sample, n_partitions)
+    part = planner.SplitterPartitioner(bounds)
+    counts = np.bincount(
+        part.bucket_np(sample), minlength=part.n_partitions
+    )
+    stats = partition_size_stats(counts)
+    assert stats["max_over_mean"] <= 2.0 + 1e-9, (counts, stats)
+    assert counts.sum() == n
+
+
+def test_splitter_collapses_duplicate_quantiles():
+    """A duplicate flood collapses boundaries instead of producing empty
+    or overlapping partitions."""
+    sample = _keys([7] * 100 + [9] * 100)
+    bounds = planner.splitter_boundaries(sample, 16)
+    part = planner.SplitterPartitioner(bounds)
+    assert part.n_partitions == 2  # one boundary survives: at key 9
+    b = part.bucket_np(_keys([6, 7, 8, 9, 10]))
+    assert b.tolist() == [0, 0, 0, 1, 1]
+    # all-equal: no boundary splits anything
+    allsame = planner.splitter_boundaries(_keys([5] * 50), 8)
+    assert allsame.shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# Auto-tuned knobs
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(0, 2**40),  # file_bytes
+    st.integers(1 << 16, 2**34),  # memory budget
+    st.integers(1, 16),  # readers
+    st.integers(0, 10**7),  # sample cardinality
+)
+def test_tuned_knobs_always_valid(file_bytes, budget, n_readers, card):
+    knobs = planner.tune_knobs(
+        file_bytes=file_bytes,
+        memory_budget_bytes=budget,
+        n_readers=n_readers,
+        cardinality=card,
+    )
+    assert knobs.n_partitions >= 1
+    if card > 0:
+        assert knobs.n_partitions <= max(card, 1)
+    assert (
+        planner.MIN_FLUSH_BYTES
+        <= knobs.flush_bytes
+        <= planner.MAX_FLUSH_BYTES
+    )
+    assert 1 <= knobs.batch_segments <= planner.MAX_BATCH_SEGMENTS
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 1 << 22), st.integers(1, 32))
+def test_explicit_knobs_win(n_partitions, flush, segments):
+    knobs = planner.tune_knobs(
+        file_bytes=10**9,
+        memory_budget_bytes=256 << 20,
+        cardinality=3,  # must NOT clamp explicit n_partitions
+        explicit_partitions=n_partitions,
+        explicit_flush=flush,
+        explicit_segments=segments,
+    )
+    assert knobs.n_partitions == n_partitions
+    assert knobs.flush_bytes == flush
+    assert knobs.batch_segments == min(segments, planner.MAX_BATCH_SEGMENTS)
+
+
+def test_default_budget_keeps_historical_flush():
+    """At the historical defaults (256 MB budget, 1 reader, few
+    partitions) the auto-tuner reproduces the old 1 MB flush threshold."""
+    knobs = planner.tune_knobs(
+        file_bytes=200 << 20, memory_budget_bytes=256 << 20, n_readers=1
+    )
+    assert knobs.flush_bytes == planner.MAX_FLUSH_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Decision rule
+# ---------------------------------------------------------------------------
+
+
+def test_decision_tiny_universe_forces_splitter():
+    keys = _keys(np.random.default_rng(0).integers(0, 5, 2000) * 977)
+    model = _fit(keys)
+    diag = planner.diagnose(keys, model)
+    decision, reason = planner.choose_partitioner(diag, 8)
+    assert decision == "splitter"
+    assert "tiny key universe" in reason
+
+
+def test_decision_uniform_keeps_model():
+    keys = _keys(np.random.default_rng(0).integers(0, 2**40, 4000))
+    model = _fit(keys)
+    diag = planner.diagnose(keys, model)
+    decision, _ = planner.choose_partitioner(diag, 8)
+    assert decision == "model"
+
+
+def test_decision_forced_and_invalid():
+    diag = planner.diagnose(_keys([1] * 10))
+    for forced in ("model", "splitter"):
+        d, reason = planner.choose_partitioner(
+            diag, 4, planner.PlannerConfig(partitioner=forced)
+        )
+        assert d == forced and "forced" in reason
+    try:
+        planner.choose_partitioner(
+            diag, 4, planner.PlannerConfig(partitioner="bogus")
+        )
+    except ValueError as e:
+        assert "bogus" in str(e)
+    else:
+        raise AssertionError("bad partitioner value must raise")
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**40), min_size=32, max_size=400),
+    st.integers(1, 64),
+)
+def test_plan_sort_internally_consistent(vals, n_partitions):
+    """plan_sort's partitioner and knobs agree: the partitioner's
+    n_partitions IS the tuned value, whatever the decision."""
+    sample = _keys(vals)
+    model = _fit(sample)
+    plan = planner.plan_sort(
+        sample,
+        model,
+        file_bytes=64 << 20,
+        memory_budget_bytes=8 << 20,
+        explicit_partitions=n_partitions,
+    )
+    assert plan.decision in ("model", "splitter")
+    assert plan.partitioner.n_partitions == plan.knobs.n_partitions
+    if plan.decision == "model":
+        assert plan.knobs.n_partitions == n_partitions
+    else:
+        assert plan.knobs.n_partitions <= n_partitions
+    b = plan.partitioner.bucket_np(sample)
+    assert b.min() >= 0 and b.max() < plan.knobs.n_partitions
