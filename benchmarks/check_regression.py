@@ -2,18 +2,28 @@
 
 Usage: ``python benchmarks/check_regression.py BASELINE.json CURRENT.json``
 
-Two hard gates (exit 1) plus an informational report:
+Four hard gates (exit 1) plus an informational report:
 
 * **dispatch-count regression**: the batched executor's device dispatch
   count may not grow more than 20% over the baseline — launch-overhead
   creep is exactly what the batched executor exists to prevent;
 * **batching floor**: the batched executor must keep >= 4x fewer
   dispatches than the per-partition baseline path (the PR-5 acceptance
-  bar).
+  bar);
+* **batched-rate floor**: the batched executor's rate must stay >= 0.9x
+  the per-partition rate *within the same bench run* — both sides share
+  the run's machine conditions, so the ratio is stable even where
+  absolute wall clocks are not (the PR-7 regression: batching the
+  dispatches but paying it all back in padding);
+* **crossover regression**: when the baseline carries a corpus-size
+  sweep (schema 3), the elsar-vs-extms crossover point may not
+  disappear, nor drift beyond 2x the baseline's (tolerant on purpose:
+  the sweep is coarse and the win margin near the crossover is small).
 
-Sort/query/join *rates* are reported as deltas but never gate: shared CI
-runners are too noisy for wall-clock thresholds, while dispatch counts
-are deterministic.
+Cross-run absolute sort/query/join *rates* are reported as deltas but
+never gate: shared CI runners are too noisy for wall-clock thresholds,
+while dispatch counts, same-run ratios, and the crossover index are
+deterministic or self-normalizing.
 """
 
 from __future__ import annotations
@@ -23,6 +33,8 @@ import sys
 
 DISPATCH_REGRESSION_LIMIT = 1.20  # >20% more dispatches than baseline fails
 BATCHING_FLOOR = 4  # batched must be >= 4x below per-partition
+RATE_FLOOR = 0.90  # batched rate >= 0.9x per-partition, same run
+CROSSOVER_DRIFT_LIMIT = 2.0  # crossover may not drift past 2x baseline
 
 
 def _executor_row(data: dict, name: str) -> dict:
@@ -84,6 +96,46 @@ def main(argv: "list[str] | None" = None) -> int:
             f"batching floor broken: batched={c_bat['dispatches']} "
             f"is not >= {BATCHING_FLOOR}x below "
             f"per_partition={c_per['dispatches']}"
+        )
+
+    # batched-rate floor: a same-run ratio, immune to runner speed — if
+    # batching the dispatches costs more than it saves (padding, packing)
+    # the batched executor has no reason to exist
+    ratio = c_bat["rate_mb_s"] / max(c_per["rate_mb_s"], 1e-9)
+    print(
+        f"batched/per-partition rate: {c_bat['rate_mb_s']:.2f}/"
+        f"{c_per['rate_mb_s']:.2f} MB/s = {ratio:.2f}x "
+        f"(floor {RATE_FLOOR}x)"
+    )
+    if ratio < RATE_FLOOR:
+        failures.append(
+            f"batched executor slower than per-partition: "
+            f"{ratio:.2f}x < {RATE_FLOOR}x within one run"
+        )
+
+    # crossover regression (schema 3 sweeps on both sides; a schema-2
+    # baseline simply hasn't recorded one yet — report, don't gate)
+    b_x = (base.get("sweep") or {}).get("crossover_records")
+    c_sweep = cur.get("sweep") or {}
+    if b_x is not None and c_sweep:
+        c_x = c_sweep.get("crossover_records")
+        print(f"elsar-vs-extms crossover: {b_x} -> {c_x} records")
+        if c_x is None:
+            failures.append(
+                f"crossover lost: elsar beat extms at {b_x} records in "
+                f"the baseline but never wins in the current sweep "
+                f"{c_sweep.get('sizes')}"
+            )
+        elif c_x > b_x * CROSSOVER_DRIFT_LIMIT:
+            failures.append(
+                f"crossover drifted: {b_x} -> {c_x} records "
+                f"(> {CROSSOVER_DRIFT_LIMIT}x baseline)"
+            )
+    elif c_sweep:
+        print(
+            f"elsar-vs-extms crossover: "
+            f"{c_sweep.get('crossover_records')} records "
+            f"(no baseline sweep — informational)"
         )
 
     # fast-path health: fallbacks on the uniform bench corpus mean the

@@ -29,16 +29,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def smoke(n: int, json_path: str, dist: str = "core") -> None:
+def smoke(
+    n: int,
+    json_path: str,
+    dist: str = "core",
+    sweep_sizes: "list[int] | None" = None,
+) -> None:
     """Collect sort + query + operator + executor rates into one JSON
     artifact (``benchmarks/check_regression.py`` diffs it against the
     committed ``BENCH_*.json`` baseline).  ``dist="adversarial"``
     additionally runs the hostile-corpus rows (DESIGN.md §11) so the
-    planner's decisions land in ``BENCH_ci.json``."""
+    planner's decisions land in ``BENCH_ci.json``; ``sweep_sizes``
+    (``--records`` comma list) adds the ELSAR-vs-mergesort corpus-size
+    sweep and its ``crossover_records`` (DESIGN.md §12)."""
     from benchmarks import join_rates, query_rates, sort_rates
 
     data = {
-        "schema": 2,
+        "schema": 3,
         "records": n,
         "sort": sort_rates.run(n),
         "query": query_rates.run(n),
@@ -49,6 +56,8 @@ def smoke(n: int, json_path: str, dist: str = "core") -> None:
     }
     if dist == "adversarial":
         data["adversarial"] = sort_rates.run_adversarial(n)
+    if sweep_sizes:
+        data["sweep"] = sort_rates.run_sweep(sweep_sizes)
     with open(json_path, "w") as f:
         json.dump(data, f, indent=2, default=float)
     sort_mb = max(
@@ -63,11 +72,16 @@ def smoke(n: int, json_path: str, dist: str = "core") -> None:
         f" {r['dist']}={r['planner_decision']}"
         for r in data.get("adversarial", ())
     )
+    xover = (
+        f" crossover={data['sweep']['crossover_records']}"
+        if "sweep" in data
+        else ""
+    )
     print(
         f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
         f"query={qps:.0f}q/s join={join_mb:.1f}MB/s "
         f"dispatches={disp.get('batched')}/{disp.get('per_partition')} "
-        f"(batched/per-partition){adv} -> {json_path}"
+        f"(batched/per-partition){adv}{xover} -> {json_path}"
     )
 
 
@@ -103,6 +117,13 @@ def main(argv: "list[str] | None" = None) -> None:
         help="bench-smoke mode: write sort+query+op rates as JSON",
     )
     ap.add_argument(
+        "--records",
+        default=os.environ.get("REPRO_BENCH_SWEEP", ""),
+        metavar="N1,N2,...",
+        help="bench-smoke corpus-size sweep: comma list of record counts "
+        "for the elsar-vs-extms crossover axis (DESIGN.md §12)",
+    )
+    ap.add_argument(
         "--dist",
         choices=("core", "adversarial"),
         default=os.environ.get("REPRO_BENCH_DIST", "core"),
@@ -120,8 +141,13 @@ def main(argv: "list[str] | None" = None) -> None:
         ap.error(f"invalid REPRO_BENCH_DIST {args.dist!r}")
 
     n = int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000))
+    sweep = (
+        [int(s) for s in args.records.split(",") if s.strip()]
+        if args.records
+        else None
+    )
     if args.json:
-        smoke(n, args.json, dist=args.dist)
+        smoke(n, args.json, dist=args.dist, sweep_sizes=sweep)
         return
     # explicit argv/args: the harness's own sys.argv must never leak into a
     # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that

@@ -11,14 +11,26 @@ from repro.core import external, mergesort, validate
 
 
 def run(n_records: int = 1_000_000, budget=64 << 20) -> list[dict]:
+    from repro.core.model_cache import ModelCache
+
     rows = []
     bw = common.disk_bandwidth_mb_s()
+    cache = ModelCache()
     for skewed in (False, True):
         path, chk = common.dataset(n_records, skewed)
-        for algo, fn in (("elsar", external.sort_file),
-                         ("extms", mergesort.sort_file)):
+        for algo, fn, kw in (
+            ("elsar", external.sort_file, {}),
+            # warm-start row (DESIGN.md §12): same corpus through a
+            # primed ModelCache — the train phase drops out on the hit
+            ("elsar_warm", external.sort_file, {"model_cache": cache}),
+            ("extms", mergesort.sort_file, {}),
+        ):
             with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
-                stats = fn(path, out.name, memory_budget_bytes=budget)
+                if algo == "elsar_warm":  # prime, then measure the hit
+                    external.sort_file(
+                        path, out.name, memory_budget_bytes=budget, **kw
+                    )
+                stats = fn(path, out.name, memory_budget_bytes=budget, **kw)
                 res = validate.validate_file(out.name, chk, n_records)
                 assert res["ok"], (algo, skewed, res)
                 rows.append({
@@ -27,6 +39,7 @@ def run(n_records: int = 1_000_000, budget=64 << 20) -> list[dict]:
                     "rate_mb_s": stats.rate_mb_s(),
                     "seconds": stats.total_seconds,
                     "disk_bw_mb_s": bw,
+                    "model_cache": stats.model_cache,
                 })
     return rows
 
@@ -66,6 +79,43 @@ def run_executor(n_records: int, n_partitions: int = 16) -> list[dict]:
                 "seconds": stats.wall_seconds or stats.total_seconds,
             })
     return rows
+
+
+def run_sweep(sizes: "list[int]", budget=64 << 20) -> dict:
+    """ELSAR-vs-mergesort crossover sweep (uniform corpus, DESIGN.md §12).
+
+    ELSAR pays a fixed device/model overhead (sample, train, jit) that
+    external mergesort doesn't, so it loses tiny corpora and wins big
+    ones; ``crossover_records`` is the smallest swept size where ELSAR's
+    rate reaches mergesort's (``None`` if it never does).  CI tracks the
+    crossover so a regression shows up as the win point drifting out,
+    even when absolute rates wobble with runner noise.
+    """
+    rows = []
+    for n in sorted(sizes):
+        path, chk = common.dataset(n, False)
+        for algo, fn in (("elsar", external.sort_file),
+                         ("extms", mergesort.sort_file)):
+            with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+                stats = fn(path, out.name, memory_budget_bytes=budget)
+                res = validate.validate_file(out.name, chk, n)
+                assert res["ok"], (algo, n, res)
+                rows.append({
+                    "algo": algo,
+                    "records": n,
+                    "rate_mb_s": stats.rate_mb_s(),
+                    "seconds": stats.wall_seconds or stats.total_seconds,
+                })
+    by_n = {n: {} for n in sizes}
+    for r in rows:
+        by_n[r["records"]][r["algo"]] = r["rate_mb_s"]
+    crossover = next(
+        (n for n in sorted(sizes)
+         if by_n[n]["elsar"] >= by_n[n]["extms"]),
+        None,
+    )
+    return {"sizes": sorted(sizes), "rows": rows,
+            "crossover_records": crossover}
 
 
 def run_line(n_records: int, budget=64 << 20) -> list[dict]:

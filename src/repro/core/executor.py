@@ -189,7 +189,7 @@ class PerPartitionDeviceExecutor(SortExecutor):
     parallel_safe = True
 
     def __init__(self, model, *, use_kernels=False, clock=None):
-        super().__init__(model, clock=clock)
+        super().__init__(rmi.device_params(model), clock=clock)
         self.use_kernels = use_kernels
 
     def sort_iter(self, items):
@@ -206,9 +206,24 @@ class PerPartitionDeviceExecutor(SortExecutor):
 
 
 class BatchedDeviceExecutor(SortExecutor):
-    """Device-resident batched executor: super-batch packing + the fused
-    segmented sort graph, double-buffered across ``PIPELINE_DEPTH``
-    in-flight dispatches (DESIGN.md §10)."""
+    """Device-resident batched executor: super-batch packing + one fused
+    sort dispatch per batch, double-buffered across ``PIPELINE_DEPTH``
+    in-flight dispatches (DESIGN.md §10, §12).
+
+    Two dispatch shapes behind the same packing/epilogue protocol:
+
+    * **flat** (default on CPU backends without ``use_kernels``): one
+      stable ``lax.sort`` over ``(seg, hi, lo)`` with pure-jnp encode —
+      the grid path's overflow fallback promoted to the primary, which
+      on CPU both runs and compiles several times faster than the
+      scatter-grid graph (whose Pallas kernels run in interpret mode).
+    * **grid** (accelerators / ``use_kernels``): Pallas encode → fused
+      RMI → per-segment affine remap → segmented bitonic
+      (``kernels/fused.fused_segmented_sort``).
+
+    Both pack into size-bucketed static shapes (``fused.pad_target``:
+    sixteenth-octave quanta, <= 12.5% padded slots vs up to 2x for plain
+    pow2) so one dispatch is also the fastest dispatch."""
 
     name = "batched"
     parallel_safe = False  # one packer must own the super-batch
@@ -222,6 +237,7 @@ class BatchedDeviceExecutor(SortExecutor):
         batch_bytes: int = 256 << 20,
         max_segments: int = MAX_SEGMENTS,
         depth: int = PIPELINE_DEPTH,
+        flat: "bool | None" = None,
         clock=None,
     ):
         super().__init__(model, clock=clock)
@@ -236,9 +252,16 @@ class BatchedDeviceExecutor(SortExecutor):
 
         from repro.kernels import fused
 
+        on_cpu = jax.default_backend() == "cpu"
+        # flat=None -> auto: the comparison sort wins on CPU; the grid
+        # graph wins where the Pallas kernels actually compile
+        self.flat = (on_cpu and not use_kernels) if flat is None else flat
+        if not self.flat:
+            # one-time host->device upload; dispatches reuse the leaves
+            self.model = rmi.device_params(model)
         self._fused = (
             fused.fused_segmented_sort
-            if jax.default_backend() == "cpu"
+            if on_cpu
             else fused.fused_segmented_sort_donated
         )
 
@@ -253,7 +276,7 @@ class BatchedDeviceExecutor(SortExecutor):
 
         sizes = [b.n_records for _, b in entries]
         total = sum(sizes)
-        n_pad = _next_pow2(total)
+        n_pad = fused.pad_target(total)
         keys = np.zeros((n_pad, ENCODED_BYTES), dtype=np.uint8)
         seg = np.empty(n_pad, dtype=np.int32)
         off = 0
@@ -264,6 +287,18 @@ class BatchedDeviceExecutor(SortExecutor):
             seg[off : off + m] = s
             off += m
         k = len(entries)
+        if self.flat:
+            # padding sorts strictly after every real segment (seg = k)
+            # and is dropped by the perm < total filter — no pad-share
+            # recycling, no row planning, no model on the hot path
+            if n_pad != total:
+                keys[total:] = 0xFF
+                seg[total:] = k
+            self._count_dispatch(n_pad, total, ("flat", n_pad))
+            perm_dev = fused.flat_segmented_sort(
+                jnp.asarray(keys), jnp.asarray(seg)
+            )
+            return entries, sizes, total, perm_dev, None
         pad = n_pad - total
         pad_share = np.zeros(k, dtype=np.int64)
         if pad:
@@ -321,9 +356,9 @@ class BatchedDeviceExecutor(SortExecutor):
         """Fetch one batch's permutation and emit its sorted blocks."""
         entries, sizes, total, perm_dev, overflow_dev = handle
         perm = np.asarray(perm_dev)  # blocks until the device is done
-        if bool(np.asarray(overflow_dev)):
+        if overflow_dev is not None and bool(np.asarray(overflow_dev)):
             self.fallbacks += 1
-        perm = perm[perm < total]  # drop the pow2 padding records
+        perm = perm[perm < total]  # drop the padding records
         bases = np.concatenate([[0], np.cumsum(sizes)])
         pos = 0
         for s, (tag, block) in enumerate(entries):

@@ -72,6 +72,7 @@ def sort_file(
     executor: str = "auto",
     partitioner: str = "auto",
     batch_segments: int = 0,
+    model_cache=None,
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
 
@@ -121,6 +122,14 @@ def sort_file(
     default to 0 = auto-tuned by the planner from the memory budget and
     the sample (``SortStats.tuned_knobs`` records the effective values);
     any explicit non-zero value is used verbatim.
+
+    ``model_cache`` (``repro.core.model_cache.ModelCache``, DESIGN.md
+    §12) warm-starts training across sorts: the fresh sample is checked
+    against cached models under the planner's skew band and the train
+    phase is skipped on a hit (``SortStats.model_cache`` records
+    hit/miss, ``SortStats.model_hash`` the model that partitioned).
+    Reuse never changes the output bytes — only where the partition
+    boundaries fall.
     """
     del keep_stats  # accepted for compatibility; stats are always kept
     device_sort = device_sort or use_kernels  # kernels imply device path
@@ -142,5 +151,6 @@ def sort_file(
         executor=executor,
         partitioner=partitioner,
         batch_segments=batch_segments,
+        model_cache=model_cache,
     )
     return run_pipeline(input_path, output_path, cfg)

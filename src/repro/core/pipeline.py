@@ -51,6 +51,7 @@ from repro.core.stages import (
     PartitionSpill,
     PhaseClock,
     SortStats,
+    SpillBudget,
     loader_worker,
     reader_worker,
     sorter_worker,
@@ -116,6 +117,11 @@ class SortPipelineConfig:
     partitioner: str = "auto"
     # batched-executor super-batch segment cap; 0 -> auto-tuned
     batch_segments: int = 0
+    # warm-start model cache (core/model_cache.ModelCache, DESIGN.md
+    # §12): reuse a cached RMI when the fresh sample's CDF error against
+    # it stays inside the planner's band; retrain (and store) otherwise.
+    # None -> always train.  Inert when ``model`` is pre-trained.
+    model_cache: "object | None" = None
 
 
 # ---------------------------------------------------------------------------
@@ -215,7 +221,20 @@ def run_pipeline(
         with clock.timer("train"):
             sample = fmt.sample_keys(input_path, n_est, cfg.sample_frac)
             clock.add_io(read=sample.shape[0] * fmt.key_width)
-            model = _train_stage(sample, cfg.n_leaf)
+            # warm start (DESIGN.md §12): reuse a cached model the fresh
+            # sample trusts under the planner's skew band; train + store
+            # otherwise.  Reuse changes partition boundaries at most —
+            # never the sorted output bytes.
+            model = None
+            if cfg.model_cache is not None:
+                model, stats.model_hash = cfg.model_cache.lookup(
+                    sample, n_partitions
+                )
+                stats.model_cache = "hit" if model is not None else "miss"
+            if model is None:
+                model = _train_stage(sample, cfg.n_leaf)
+                if cfg.model_cache is not None:
+                    stats.model_hash = cfg.model_cache.store(model)
         # --- Plan stage (DESIGN.md §11): diagnose the sample, pick the
         # partitioner (learned model vs sample splitter), tune the knobs
         with clock.timer("plan"):
@@ -261,10 +280,14 @@ def run_pipeline(
     # a batching executor needs a single driver that owns the super-batch
     n_sorters = cfg.n_sorters if executor.parallel_safe else 1
 
-    # --- Partition / Sort / Write stages, queue-connected
+    # --- Partition / Sort / Write stages, queue-connected.  Spills are
+    # RAM-first under a shared budget (half the memory budget, §12):
+    # fragments that fit wait in memory, the overflow hits disk exactly
+    # as before — content and order are placement-independent.
     tmp = tempfile.mkdtemp(prefix="elsar_", dir=cfg.workdir)
+    spill_ram = SpillBudget(cfg.memory_budget_bytes // 2)
     spills = [
-        PartitionSpill(os.path.join(tmp, f"p{j:05d}.bin"))
+        PartitionSpill(os.path.join(tmp, f"p{j:05d}.bin"), ram=spill_ram)
         for j in range(n_partitions)
     ]
     stripe_q: queue.SimpleQueue = queue.SimpleQueue()
@@ -343,6 +366,7 @@ def run_pipeline(
         raise errors[0]
     os.rmdir(tmp)
     stats.fallbacks += executor.fallbacks
+    stats.spill_disk_bytes = spill_ram.disk_bytes
 
     if cfg.emit_manifest:
         from repro.core import manifest as manifest_lib

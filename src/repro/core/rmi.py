@@ -48,7 +48,14 @@ from repro.core import encoding
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class RMIParams:
-    """Trained CDF model. All leaves are jnp arrays (device-resident, ~KBs)."""
+    """Trained CDF model (~KBs of array leaves).
+
+    ``fit`` returns **host (NumPy) leaves** so a host-only sort never
+    initializes the JAX backend (backend bring-up used to dominate the
+    train phase at bench scale).  The model is a registered pytree, so
+    jitted consumers accept it as-is; device executors convert the leaves
+    once up front (``device_params``) to avoid per-dispatch transfers.
+    """
 
     # global feature normalization (root routing)
     min_hi: jnp.ndarray  # () uint32
@@ -200,8 +207,10 @@ def fit_encoded(hi: np.ndarray, lo: np.ndarray, n_leaf: int = 1024) -> RMIParams
                           intercepts)
     slopes = np.where(occupied, slopes, 0.0)
 
-    f32 = lambda v: jnp.asarray(v, dtype=jnp.float32)
-    u32 = lambda v: jnp.asarray(v, dtype=jnp.uint32)
+    # host leaves on purpose: creating jnp arrays here would pay JAX
+    # backend init inside every cold host-path sort (see class docstring)
+    f32 = lambda v: np.asarray(v, dtype=np.float32)
+    u32 = lambda v: np.asarray(v, dtype=np.uint32)
     return RMIParams(
         min_hi=u32(min_hi),
         min_lo=u32(min_lo),
@@ -216,6 +225,12 @@ def fit_encoded(hi: np.ndarray, lo: np.ndarray, n_leaf: int = 1024) -> RMIParams
         leaf_min_lo=u32(lmin_lo),
         leaf_inv_range=f32(linv),
     )
+
+
+def device_params(params: RMIParams) -> RMIParams:
+    """One-time host->device transfer of every leaf (executors call this
+    once per sort so dispatches never re-upload the model)."""
+    return jax.tree.map(jnp.asarray, params)
 
 
 def predict_cdf(params: RMIParams, hi: jnp.ndarray, lo: jnp.ndarray) -> jnp.ndarray:

@@ -17,7 +17,7 @@ together; the sort implementation itself lives behind the
 
 from repro.core.stages.loader import loader_worker
 from repro.core.stages.queues import Abort, get, put
-from repro.core.stages.reader import PartitionSpill, reader_worker
+from repro.core.stages.reader import PartitionSpill, SpillBudget, reader_worker
 from repro.core.stages.sorter import sorter_worker
 from repro.core.stages.stats import PhaseClock, SortStats
 from repro.core.stages.writer import writer_worker
@@ -26,6 +26,7 @@ __all__ = [
     "Abort",
     "PartitionSpill",
     "PhaseClock",
+    "SpillBudget",
     "SortStats",
     "get",
     "loader_worker",

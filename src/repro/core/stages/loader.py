@@ -5,6 +5,13 @@ already committed for the next few partitions (bounded window); once
 fragment sets are final, parses each partition's blob back into a
 RecordBlock (the format re-derives offsets/keys) and emits partitions in
 ascending key order.
+
+The prefetch window is the upstream half of the executor's double
+buffer (§12): it spans the partitions of the *next* super-batch
+(``cfg.batch_segments``), byte-capped at a quarter of the memory
+budget, and keeps running through the drain phase — so the disk reads
+for batch k+1 overlap the pack/dispatch/fetch of batch k instead of
+serializing in front of it.
 """
 
 from __future__ import annotations
@@ -33,10 +40,36 @@ def loader_worker(
     followed by one ``None`` sentinel per sorter worker."""
     try:
         emit = 0
-        window = cfg.queue_depth + 1
+        # the window covers the next super-batch (the executor packs up
+        # to batch_segments partitions per dispatch), byte-capped below
+        window = max(
+            cfg.queue_depth + 1,
+            getattr(cfg, "batch_segments", 0) + cfg.queue_depth,
+        )
+        ahead_bytes = max(cfg.memory_budget_bytes // 4, 1 << 20)
         n_parts = len(spills)
+
+        def read_ahead(start: int) -> int:
+            """Prefetch committed fragments for partitions in the window
+            after ``start``; stops at the byte cap."""
+            progressed, budget = 0, ahead_bytes
+            for k in range(start, min(start + window, n_parts)):
+                budget -= spills[k].n_bytes
+                if budget < 0 and k > start:
+                    break
+                with clock.timer("sort_read") as t:
+                    got = spills[k].prefetch()
+                    clock.add_io(read=got)
+                    if not got:
+                        t.discard()  # idle poll, not sort_read work
+                progressed += got
+            return progressed
+
         while emit < n_parts and not abort.is_set():
             if partition_done.is_set():
+                # keep the window warm: batch k+1's disk reads overlap
+                # batch k's sort/write downstream
+                read_ahead(emit + 1)
                 with clock.timer("sort_read"):
                     blob, fresh = spills[emit].take()
                     clock.add_io(read=fresh)
@@ -47,15 +80,7 @@ def loader_worker(
                     put(sort_q, (offsets_box["offsets"][emit], block), abort)
                 emit += 1
             else:
-                progressed = 0
-                for k in range(emit, min(emit + window, n_parts)):
-                    with clock.timer("sort_read") as t:
-                        got = spills[k].prefetch()
-                        clock.add_io(read=got)
-                        if not got:
-                            t.discard()  # idle poll, not sort_read work
-                    progressed += got
-                if not progressed:
+                if not read_ahead(emit):
                     partition_done.wait(0.02)
         for _ in range(n_sorters):
             put(sort_q, None, abort)

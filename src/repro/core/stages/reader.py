@@ -21,43 +21,96 @@ from repro.core.stages.queues import Abort
 from repro.core.stages.stats import PhaseClock
 
 
+class SpillBudget:
+    """Shared byte budget for RAM-resident spill fragments (§12).
+
+    One instance spans every partition of a sort: ``try_take`` reserves
+    room for a fragment (first-come, bounded), ``release`` returns it
+    when the partition is drained.  Fragments that don't fit go to disk
+    exactly as before — placement affects only *where* bytes wait, never
+    their content or order, so output stays byte-identical whatever the
+    RAM/disk mix (and whichever thread won the reservation race).
+    """
+
+    def __init__(self, limit_bytes: int):
+        self.limit = max(0, int(limit_bytes))
+        self._lock = threading.Lock()
+        self._used = 0
+        self.disk_bytes = 0  # fragments that overflowed to disk (total)
+
+    def try_take(self, n: int) -> bool:
+        with self._lock:
+            if self._used + n <= self.limit:
+                self._used += n
+                return True
+            return False
+
+    def release(self, n: int) -> None:
+        with self._lock:
+            self._used -= n
+
+
 class PartitionSpill:
-    """One partition's spill file: coalesced appends + a fragment index.
+    """One partition's spilled fragments: RAM-first, disk overflow.
 
     Writers (readers of the input) append pre-coalesced fragment blobs
     under a lock, each tagged ``(stripe, seq)``.  Blobs are opaque record
     bytes — the caller supplies the record count, so the spill layer is
     record-format-agnostic (fixed-stride and delimiter-terminated blobs
-    spill identically).  The loader side runs in a single thread and may
-    ``prefetch()`` committed fragments *while writers are still
-    appending* — segments are recorded only after their bytes hit the
-    file, so reading a recorded segment is always safe.  ``take()``
-    finalizes: reads the rest, reorders fragments by (stripe, seq) into
-    global input order, and deletes the file.
+    spill identically).  With a :class:`SpillBudget` (``ram``), fragments
+    stay in memory while the shared budget lasts and only the overflow
+    hits the spill file — on the bench corpus that removes the partition
+    phase's write+re-read round trip entirely; ``ram=None`` keeps the
+    historical all-disk behavior.  The loader side runs in a single
+    thread and may ``prefetch()`` committed fragments *while writers are
+    still appending* — segments are recorded only after their bytes hit
+    RAM or the file, so reading a recorded segment is always safe.
+    ``take()`` finalizes: reads the rest, reorders fragments by
+    (stripe, seq) into global input order, and deletes the file.
+
+    I/O accounting is *logical* spill traffic (every fragment counts,
+    RAM-resident or not) so ``SortStats`` byte counters stay identical
+    across budgets and reader counts; the physical saving is visible in
+    wall time and ``SpillBudget.disk_bytes``.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, ram: "SpillBudget | None" = None):
         self.path = path
         self._lock = threading.Lock()
         self._f = None
-        self._pos = 0
+        self._file_pos = 0  # disk offset of the next disk fragment
+        self._total = 0  # all fragment bytes, RAM + disk
         self.n_records = 0
-        self.segments: list[tuple[int, int, int, int]] = []  # stripe, seq, off, len
+        # (stripe, seq, off, len); off == -1 marks a RAM-resident blob
+        self.segments: list[tuple[int, int, int, int]] = []
+        self._mem: dict[int, bytes] = {}  # segment index -> RAM blob
+        self._ram = ram
         self._loaded: dict[int, bytes] = {}  # loader-thread-only
+        self._n_seen = 0  # loader-side fast-path cursor
         self._read_fd = -1
 
     @property
     def n_bytes(self) -> int:
-        return self._pos
+        return self._total
 
     # -- writer side (reader pool) ------------------------------------
     def append(self, stripe: int, seq: int, blob: bytes, n_records: int) -> None:
         with self._lock:
-            if self._f is None:
-                self._f = open(self.path, "wb", buffering=0)
-            self._f.write(blob)
-            self.segments.append((stripe, seq, self._pos, len(blob)))
-            self._pos += len(blob)
+            idx = len(self.segments)
+            if self._ram is not None and self._ram.try_take(len(blob)):
+                self._mem[idx] = blob
+                self.segments.append((stripe, seq, -1, len(blob)))
+            else:
+                if self._f is None:
+                    self._f = open(self.path, "wb", buffering=0)
+                self._f.write(blob)
+                self.segments.append(
+                    (stripe, seq, self._file_pos, len(blob))
+                )
+                self._file_pos += len(blob)
+                if self._ram is not None:
+                    self._ram.disk_bytes += len(blob)
+            self._total += len(blob)
             self.n_records += n_records
 
     def close_writer(self) -> None:
@@ -68,18 +121,21 @@ class PartitionSpill:
 
     # -- loader side (single thread) ----------------------------------
     def prefetch(self) -> int:
-        """Read committed-but-unread fragments; returns bytes read now."""
+        """Make committed-but-unseen fragments loadable; returns the
+        fresh bytes (disk reads + newly visible RAM fragments)."""
         with self._lock:
             committed = len(self.segments)
         done = 0
-        for i in range(committed):
-            if i in self._loaded:
-                continue
+        for i in range(self._n_seen, committed):
             _, _, off, nbytes = self.segments[i]
+            if off < 0:  # RAM-resident: already loaded, count once
+                done += nbytes
+                continue
             if self._read_fd < 0:
                 self._read_fd = os.open(self.path, os.O_RDONLY)
             self._loaded[i] = os.pread(self._read_fd, nbytes, off)
             done += nbytes
+        self._n_seen = committed
         return done
 
     def take(self) -> tuple[bytes | None, int]:
@@ -87,7 +143,7 @@ class PartitionSpill:
 
         The blob holds the partition's record bytes in global input order
         (fragments sorted by (stripe, seq)); the spill file is deleted.
-        ``fresh_bytes`` counts only bytes read by *this* call, so
+        ``fresh_bytes`` counts only bytes first seen by *this* call, so
         prefetched bytes are never double-counted.
         """
         fresh = self.prefetch()
@@ -101,7 +157,13 @@ class PartitionSpill:
             os.unlink(self.path)
         if not order:
             return None, fresh
-        blob = b"".join(self._loaded[i] for i in order)
+        blob = b"".join(
+            self._mem[i] if self.segments[i][2] < 0 else self._loaded[i]
+            for i in order
+        )
+        if self._ram is not None and self._mem:
+            self._ram.release(sum(len(b) for b in self._mem.values()))
+        self._mem.clear()
         self._loaded.clear()
         return blob, fresh
 

@@ -60,6 +60,15 @@ class SortStats:
     planner_reason: str = ""
     planner_diagnostics: dict = dataclasses.field(default_factory=dict)
     tuned_knobs: dict = dataclasses.field(default_factory=dict)
+    # warm-start model cache (DESIGN.md §12): "" when no cache was
+    # passed, else "hit" (cached model reused, train skipped) or "miss"
+    # (band check failed — trained fresh and stored).  ``model_hash`` is
+    # the manifest-v3 hash of the model that actually partitioned.
+    model_cache: str = ""
+    model_hash: str = ""
+    # spill fragments that overflowed the RAM budget to disk (physical
+    # write bytes; the logical spill traffic stays in bytes_written)
+    spill_disk_bytes: int = 0
 
     @property
     def total_seconds(self) -> float:

@@ -66,16 +66,31 @@ class StragglerWatchdog:
 
 
 class Heartbeat:
-    def __init__(self, path: str, interval_s: float = 30.0):
+    """Rate-limited liveness file.
+
+    The beat interval is measured on a monotonic clock (``time.time``
+    jumps under NTP slew/step and can suppress or burst beats); the file
+    *content* keeps wall time so the launcher's poller can compare it
+    against its own clock.  ``clock`` is injectable for tests.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        interval_s: float = 30.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.path = path
         self.interval_s = interval_s
-        self._last = 0.0
+        self.clock = clock
+        self._last: float | None = None  # None -> first beat always fires
 
     def beat(self, step: int) -> None:
-        now = time.time()
-        if now - self._last >= self.interval_s:
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                f.write(f"{step} {now}\n")
-            os.replace(tmp, self.path)
-            self._last = now
+        now = self.clock()
+        if self._last is not None and now - self._last < self.interval_s:
+            return
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{step} {time.time()}\n")
+        os.replace(tmp, self.path)
+        self._last = now

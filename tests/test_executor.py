@@ -150,13 +150,55 @@ def test_batched_executor_matches_host(sizes):
 
 
 def test_batched_executor_duplicate_fallback_matches_host():
+    """The grid path's overflow fallback (pinned via flat=False — on CPU
+    the auto choice is the flat sort, which has no fallback to take)."""
     model = _model()
     blocks = _blocks([2000, 500], seed=2, dup=True)
-    ex = BatchedDeviceExecutor(model)
+    ex = BatchedDeviceExecutor(model, flat=False)
     got = dict(ex.sort_iter(enumerate(blocks)))
     assert ex.fallbacks >= 1  # one key per row saturates capacity
     for i, blk in enumerate(blocks):
         assert got[i].tobytes() == _host_sorted(model, blk).tobytes()
+
+
+def test_flat_executor_duplicates_match_host():
+    """The flat CPU dispatch is exact under duplicate saturation — no
+    overflow concept, no fallback counter."""
+    model = _model()
+    blocks = _blocks([2000, 500], seed=2, dup=True)
+    ex = BatchedDeviceExecutor(model, flat=True)
+    got = dict(ex.sort_iter(enumerate(blocks)))
+    assert ex.fallbacks == 0
+    for i, blk in enumerate(blocks):
+        assert got[i].tobytes() == _host_sorted(model, blk).tobytes()
+
+
+@pytest.mark.parametrize("sizes", [[100, 1023, 1024, 1025, 7], [5000, 4, 3000]])
+def test_flat_and_grid_paths_byte_identical(sizes):
+    """Both dispatch shapes implement the same stable segmented order."""
+    model = _model()
+    blocks = _blocks(sizes, seed=6)
+    outs = []
+    for flat in (True, False):
+        ex = BatchedDeviceExecutor(model, flat=flat)
+        got = dict(ex.sort_iter(enumerate(blocks)))
+        outs.append(b"".join(got[i].tobytes() for i in range(len(sizes))))
+    assert outs[0] == outs[1]
+
+
+def test_pad_target_waste_bounded():
+    """Size-bucketed padding wastes <= 12.5% (vs up to 2x for pow2) and
+    stays monotone with a bounded static-shape set per octave."""
+    prev = 0
+    for n in list(range(1, 600)) + [4097, 12_345, 50_000, (1 << 20) + 1]:
+        t = fused.pad_target(n)
+        assert t >= n
+        assert t >= prev  # monotone over increasing n
+        assert t - n <= max(t // 8, 8), (n, t)
+        prev = t
+    # eighth-octave quanta: at most 8 distinct targets per octave
+    octave = {fused.pad_target(n) for n in range(4097, 8193)}
+    assert len(octave) <= 8
 
 
 def test_batched_executor_batches_partitions():

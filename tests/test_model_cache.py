@@ -1,0 +1,136 @@
+"""Warm-start model cache (core/model_cache.py, DESIGN.md §12).
+
+Three invariants: (1) sorting with a cache-hit model is byte-identical
+to a fresh-trained sort; (2) hit/miss outcomes land on both the cache
+counters and ``SortStats``; (3) a drifted corpus fails the planner-band
+trust check and forces a retrain instead of reusing a stale model.
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core import external, rmi, validate
+from repro.core.model_cache import ModelCache
+from repro.data import gensort
+
+N = 30_000
+
+
+def _sha256(path):
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def uniform_input(tmp_path_factory):
+    d = tmp_path_factory.mktemp("mcdata")
+    path = str(d / "uniform.bin")
+    gensort.write_file(path, N, seed=11)
+    return path
+
+
+def _sort(inp, out, cache=None, seed_kwargs=None):
+    return external.sort_file(
+        inp,
+        out,
+        memory_budget_bytes=4 << 20,
+        batch_records=10_000,
+        model_cache=cache,
+        **(seed_kwargs or {}),
+    )
+
+
+def test_cache_hit_byte_identical(uniform_input, tmp_path):
+    """Second sort of a same-distribution corpus reuses the cached model
+    and must produce the same bytes a fresh-trained sort produces."""
+    cache = ModelCache()
+    # fresh-trained reference (no cache at all)
+    s_ref = _sort(uniform_input, str(tmp_path / "ref.bin"))
+    s1 = _sort(uniform_input, str(tmp_path / "a.bin"), cache)
+    s2 = _sort(uniform_input, str(tmp_path / "b.bin"), cache)
+    assert s1.model_cache == "miss" and s2.model_cache == "hit"
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert s1.model_hash and s1.model_hash == s2.model_hash
+    assert (
+        _sha256(str(tmp_path / "ref.bin"))
+        == _sha256(str(tmp_path / "a.bin"))
+        == _sha256(str(tmp_path / "b.bin"))
+    )
+    # hit genuinely skipped training: same sorted bytes either way, and
+    # the reused model carries the hash of the first sort's stored model
+    assert s_ref.model_cache == "" and s_ref.model_hash == ""
+
+
+def test_cache_hit_differential_grid(uniform_input, tmp_path):
+    """Cached-model sorts stay byte-identical across reader counts and
+    executors (the cache only moves partition boundaries)."""
+    cache = ModelCache()
+    _sort(uniform_input, str(tmp_path / "warm.bin"), cache)  # populate
+    ref = _sha256(str(tmp_path / "warm.bin"))
+    for i, kwargs in enumerate(
+        [{"n_readers": 2}, {"n_readers": 4, "n_sorters": 2}]
+    ):
+        out = str(tmp_path / f"g{i}.bin")
+        st = _sort(uniform_input, out, cache, kwargs)
+        assert st.model_cache == "hit", kwargs
+        assert _sha256(out) == ref, kwargs
+    res = validate.validate_file(
+        str(tmp_path / "g0.bin"),
+        validate.checksum(gensort.read_records(uniform_input, mmap=False)),
+        N,
+    )
+    assert res["ok"], res
+
+
+def test_drifted_corpus_invalidates(uniform_input, tmp_path):
+    """A corpus from a disjoint key range must fail the planner-band
+    check against the uniform-trained model and retrain."""
+    cache = ModelCache()
+    _sort(uniform_input, str(tmp_path / "u.bin"), cache)
+    assert cache.misses == 1
+    # drifted corpus: keys confined to a narrow high slice of the space —
+    # the uniform model's CDF is flat there, so skew blows the band
+    drift = str(tmp_path / "drift.bin")
+    rec = gensort.make_records(N, seed=3)
+    rec[:, :6] = 0xFE  # pin the top 6 key bytes into one narrow slice
+    with open(drift, "wb") as f:
+        f.write(rec.tobytes())
+    # n_partitions=8 makes the band decisive: skew ~= cdf_err * 8 >> 4
+    st = _sort(drift, str(tmp_path / "drift_out.bin"), cache,
+               {"n_partitions": 8})
+    assert st.model_cache == "miss"
+    assert cache.misses == 2 and cache.hits == 0
+    # the retrained model was stored: a re-sort of the drifted corpus hits
+    st2 = _sort(drift, str(tmp_path / "drift_out2.bin"), cache,
+                {"n_partitions": 8})
+    assert st2.model_cache == "hit" and st2.model_hash == st.model_hash
+    assert _sha256(str(tmp_path / "drift_out.bin")) == _sha256(
+        str(tmp_path / "drift_out2.bin")
+    )
+
+
+def test_lru_eviction_and_store_dedup():
+    """store() dedups by hash and evicts least-recently-used entries."""
+    cache = ModelCache(max_entries=2)
+    models = [
+        rmi.fit(gensort.uniform_keys(2_000, seed=s), n_leaf=16)
+        for s in range(3)
+    ]
+    h0 = cache.store(models[0])
+    assert cache.store(models[0]) == h0 and len(cache) == 1  # dedup
+    cache.store(models[1])
+    cache.store(models[2])  # evicts models[0]
+    assert len(cache) == 2
+    sample = gensort.uniform_keys(1_000, seed=9)
+    model, h = cache.lookup(sample, n_partitions=4)
+    assert model is not None and h != h0  # h0 was evicted; MRU wins
+
+
+def test_empty_sample_never_hits():
+    cache = ModelCache()
+    cache.store(rmi.fit(gensort.uniform_keys(1_000, seed=1), n_leaf=16))
+    model, h = cache.lookup(np.empty((0, 10), dtype=np.uint8), 4)
+    assert model is None and h == ""
+    assert cache.misses == 1

@@ -108,6 +108,41 @@ def test_reader_buffer_cap_many_partitions(dataset, tmp_path):
     assert outs[0] == outs[1]
 
 
+def test_spill_ram_disk_mix_matches_disk_only(tmp_path):
+    """RAM-first spills (SpillBudget) must reproduce the all-disk blob
+    exactly: placement changes where fragments wait, never their order."""
+    from repro.core.stages import PartitionSpill, SpillBudget
+
+    frags = [  # (stripe, seq, blob) appended out of stripe order
+        (2, 0, b"E" * 300),
+        (0, 0, b"A" * 200),
+        (1, 1, b"D" * 100),
+        (0, 1, b"B" * 500),
+        (1, 0, b"C" * 50),
+    ]
+    ram = SpillBudget(550)  # fits ~2 fragments; the rest overflow to disk
+    mixed = PartitionSpill(str(tmp_path / "mix.spill"), ram=ram)
+    disk = PartitionSpill(str(tmp_path / "disk.spill"))
+    for i, (stripe, seq, blob) in enumerate(frags):
+        mixed.append(stripe, seq, blob, n_records=1)
+        disk.append(stripe, seq, blob, n_records=1)
+        if i == 2:  # interleave a mid-write prefetch like the loader does
+            assert mixed.prefetch() == 600
+    total = sum(len(b) for _, _, b in frags)
+    assert mixed.n_bytes == disk.n_bytes == total
+    assert 0 < ram.disk_bytes < total  # genuinely mixed placement
+    for sp in (mixed, disk):
+        sp.close_writer()
+    blob_mixed, fresh_mixed = mixed.take()
+    blob_disk, fresh_disk = disk.take()
+    assert blob_mixed == blob_disk  # (stripe, seq) order, not arrival
+    assert blob_mixed.startswith(b"A" * 200 + b"B" * 500 + b"C" * 50)
+    # prefetch bytes + take bytes account every byte exactly once
+    assert 600 + fresh_mixed == fresh_disk == total
+    assert ram._used == 0  # budget returned after the drain
+    assert not (tmp_path / "mix.spill").exists()
+
+
 def test_record_stripes_partition_input():
     """Stripes tile [0, n) contiguously in index order, any stripe count."""
     for n, s in [(10, 1), (10, 3), (10, 10), (10, 64), (1_000_003, 16)]:

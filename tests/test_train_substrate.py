@@ -1,6 +1,7 @@
 """Training substrate: optimizer, checkpoint, train loop, fault tools."""
 
 import os
+import time
 
 import numpy as np
 import jax
@@ -146,6 +147,24 @@ def test_straggler_watchdog():
     assert not w.observe(1, 1.1)
     assert w.observe(2, 5.0)
     assert w.flagged[0][0] == 2
+
+
+def test_heartbeat_monotonic_clock(tmp_path):
+    # Injected fake clock: beats are rate-limited on *elapsed monotonic*
+    # time, so a wall-clock jump can neither burst nor suppress them.
+    t = [100.0]
+    hb = fault.Heartbeat(str(tmp_path / "hb"), interval_s=30.0,
+                         clock=lambda: t[0])
+    hb.beat(0)  # first beat always writes
+    assert (tmp_path / "hb").read_text().split()[0] == "0"
+    t[0] += 29.9
+    hb.beat(1)  # under the interval -> suppressed
+    assert (tmp_path / "hb").read_text().split()[0] == "0"
+    t[0] += 0.1
+    hb.beat(2)  # exactly one interval since last write -> fires
+    assert (tmp_path / "hb").read_text().split()[0] == "2"
+    # default clock is monotonic, immune to time.time() steps
+    assert fault.Heartbeat("x").clock is time.monotonic
 
 
 def test_retry_policy():
