@@ -34,6 +34,7 @@ def smoke(
     json_path: str,
     dist: str = "core",
     sweep_sizes: "list[int] | None" = None,
+    mesh_n: int = 0,
 ) -> None:
     """Collect sort + query + operator + executor rates into one JSON
     artifact (``benchmarks/check_regression.py`` diffs it against the
@@ -58,6 +59,10 @@ def smoke(
         data["adversarial"] = sort_rates.run_adversarial(n)
     if sweep_sizes:
         data["sweep"] = sort_rates.run_sweep(sweep_sizes)
+    if mesh_n:
+        # distributed axis (DESIGN.md §13): host vs mesh-batched final
+        # pass over an N-device data mesh (main() fakes the devices)
+        data["mesh"] = sort_rates.run_mesh(n, mesh_n)
     with open(json_path, "w") as f:
         json.dump(data, f, indent=2, default=float)
     sort_mb = max(
@@ -77,15 +82,37 @@ def smoke(
         if "sweep" in data
         else ""
     )
+    mesh_s = "".join(
+        f" mesh_{r['executor']}={r['rate_mb_s']:.1f}MB/s"
+        for r in data.get("mesh", ())
+    )
     print(
         f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
         f"query={qps:.0f}q/s join={join_mb:.1f}MB/s "
         f"dispatches={disp.get('batched')}/{disp.get('per_partition')} "
-        f"(batched/per-partition){adv}{xover} -> {json_path}"
+        f"(batched/per-partition){adv}{xover}{mesh_s} -> {json_path}"
     )
 
 
+def _peek_mesh(argv: "list[str]") -> int:
+    """Extract ``--mesh N`` before anything imports jax: faking host
+    devices only works if XLA_FLAGS is set before backend init."""
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--mesh="):
+            return int(a.split("=", 1)[1])
+    return int(os.environ.get("REPRO_BENCH_MESH", "0") or 0)
+
+
 def main(argv: "list[str] | None" = None) -> None:
+    argv = argv if argv is not None else sys.argv[1:]
+    mesh_n = _peek_mesh(argv)
+    if mesh_n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={mesh_n}"
+        ).strip()
     from benchmarks import (
         io_stats,
         join_rates,
@@ -130,7 +157,15 @@ def main(argv: "list[str] | None" = None) -> None:
         help="corpus axis for bench-smoke: core distributions only, or "
         "additionally the hostile planner corpora (DESIGN.md §11)",
     )
-    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    ap.add_argument(
+        "--mesh",
+        type=int,
+        default=0,
+        metavar="N",
+        help="bench-smoke distributed axis: run sort_file_distributed "
+        "over an N-device data mesh (fakes N host devices; DESIGN.md §13)",
+    )
+    args = ap.parse_args(argv)
     if args.format not in ("fixed", "line", "all"):
         # argparse does not validate defaults, so a typo'd
         # REPRO_BENCH_FORMAT must fail loudly, not select zero suites
@@ -147,7 +182,8 @@ def main(argv: "list[str] | None" = None) -> None:
         else None
     )
     if args.json:
-        smoke(n, args.json, dist=args.dist, sweep_sizes=sweep)
+        smoke(n, args.json, dist=args.dist, sweep_sizes=sweep,
+              mesh_n=mesh_n)
         return
     # explicit argv/args: the harness's own sys.argv must never leak into a
     # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that

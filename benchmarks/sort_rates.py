@@ -205,3 +205,39 @@ def main_line(n_records: int = 1_000_000):
 
 if __name__ == "__main__":
     main()
+
+
+def run_mesh(n_records: int, n_dev: int) -> list[dict]:
+    """Distributed sorter rates over an ``n_dev`` data mesh (DESIGN.md
+    §13): the host final pass vs the mesh-batched ``shard_map`` executor.
+    Caller is responsible for faking host devices
+    (``--xla_force_host_platform_device_count``) before jax initializes;
+    the row degrades to however many devices actually exist."""
+    import jax
+
+    from repro.core import terasort
+    from repro.launch.mesh import make_data_mesh
+
+    n_dev = max(1, min(n_dev, len(jax.devices())))
+    path, chk = common.dataset(n_records, False)
+    mesh = make_data_mesh(n_dev)
+    rows = []
+    for executor in ("host", "mesh"):
+        with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+            stats = terasort.sort_file_distributed(
+                path, out.name, mesh, executor=executor,
+                workdir=common.CACHE_DIR,
+            )
+            res = validate.validate_file(out.name, chk, n_records)
+            assert res["ok"], (executor, res)
+            rows.append({
+                "executor": executor,
+                "n_dev": n_dev,
+                "dispatches": stats.device_dispatches,
+                "occupancy": stats.batch_occupancy,
+                "jit_compiles": stats.jit_compiles,
+                "fallbacks": stats.fallbacks,
+                "rate_mb_s": stats.rate_mb_s(),
+                "seconds": stats.wall_seconds or stats.total_seconds,
+            })
+    return rows

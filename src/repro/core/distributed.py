@@ -32,10 +32,6 @@ from repro.core import learned_sort, partition, rmi
 from repro.core.encoding import SENTINEL
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (x - 1)).bit_length()
-
-
 def make_sort_fn(
     mesh: Mesh,
     axis_names: Sequence[str],
@@ -60,7 +56,7 @@ def make_sort_fn(
     n_dev = 1
     for a in axis_names:
         n_dev *= mesh.shape[a]
-    capacity = _next_pow2(int(n_per_device * capacity_factor / n_dev) + 1)
+    capacity = partition.route_capacity(n_per_device, n_dev, capacity_factor)
     out_width = capacity * n_dev
 
     def local_fn(hi, lo, val):

@@ -406,6 +406,199 @@ class BatchedDeviceExecutor(SortExecutor):
                 yield from self._finish(pending.popleft())
 
 
+class MeshBatchedExecutor(SortExecutor):
+    """Mesh-sharded batched executor: the flat super-batch graph run
+    *per device inside one ``shard_map`` program* (DESIGN.md §13).
+
+    Where :class:`BatchedDeviceExecutor` packs up to ``max_segments``
+    partitions into one device's dispatch, this executor additionally
+    spreads the packed segments over every device of a jax mesh: block
+    ``i`` of a dispatch group is assigned to the least-loaded device
+    (ties resolve in device order, so ``n_dev`` equal-sized key ranges
+    land on their owner devices), each device's shard is padded to a
+    shared sixteenth-octave :func:`~repro.kernels.fused.pad_target`
+    width, and ONE jitted ``shard_map`` launch sorts every device's
+    segments locally — the flat stable ``(seg, hi, lo)`` comparison
+    graph of DESIGN.md §12, which is byte-identical to the host path by
+    the same argument (pure-jnp encode, stable ties, memcmp touch-up in
+    the epilogue).  No collective runs inside the program: records were
+    already routed to their owner ranges, so the sort is embarrassingly
+    device-local — the paper's merge-free invariant at mesh scale.
+
+    Occupancy/dispatch accounting matches the single-device executor:
+    one dispatch covers ``n_dev * n_pad`` slots, and padded slots (both
+    per-device tail pad and idle devices) count against occupancy.
+    """
+
+    name = "mesh"
+    parallel_safe = False  # one packer owns the super-batch
+
+    def __init__(
+        self,
+        model,
+        *,
+        mesh=None,
+        axis_names=("data",),
+        batch_slots: int = 1 << 20,
+        batch_bytes: int = 256 << 20,
+        max_segments: int = MAX_SEGMENTS,
+        depth: int = PIPELINE_DEPTH,
+        clock=None,
+    ):
+        super().__init__(model, clock=clock)
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        if mesh is None:
+            from repro.launch.mesh import make_data_mesh
+
+            mesh = make_data_mesh()
+            axis_names = ("data",)
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+        self.n_dev = 1
+        for a in self.axis_names:
+            self.n_dev *= mesh.shape[a]
+        self._slots_cap = max(2, batch_slots)
+        self._bytes_cap = max(1, batch_bytes)
+        self.max_segments = max(1, min(max_segments, MAX_SEGMENTS))
+        self.depth = max(1, depth)
+        self._sharding = NamedSharding(mesh, PartitionSpec(self.axis_names))
+        self._fns: dict = {}  # n_pad -> jitted shard_map sort
+
+    def _sort_fn(self, n_pad: int):
+        fn = self._fns.get(n_pad)
+        if fn is None:
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            from repro.core import encoding
+
+            def local_fn(keys, seg):
+                # local shapes: keys (1, n_pad, 8), seg (1, n_pad)
+                hi, lo = encoding.encode(keys.reshape(n_pad, -1))
+                idx = jnp.arange(n_pad, dtype=jnp.int32)
+                _, _, _, perm = jax.lax.sort(
+                    (seg.reshape(n_pad), hi, lo, idx),
+                    num_keys=3,
+                    is_stable=True,
+                )
+                return perm.reshape(1, n_pad)
+
+            spec = P(self.axis_names)
+            fn = jax.jit(
+                shard_map(
+                    local_fn,
+                    mesh=self.mesh,
+                    in_specs=(spec, spec),
+                    out_specs=spec,
+                    check_rep=False,
+                )
+            )
+            self._fns[n_pad] = fn
+        return fn
+
+    # -- packing -------------------------------------------------------
+
+    def _dispatch(self, entries: list) -> tuple:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import fused
+
+        # least-loaded device assignment, stable in arrival order: the
+        # i-th of n_dev equal ranges lands on device i (its owner)
+        dev_entries: list = [[] for _ in range(self.n_dev)]
+        dev_load = [0] * self.n_dev
+        for tag, b in entries:
+            d = min(range(self.n_dev), key=lambda i: dev_load[i])
+            dev_entries[d].append((tag, b))
+            dev_load[d] += b.n_records
+        total = sum(dev_load)
+        n_pad = fused.pad_target(max(max(dev_load), 1))
+        keys = np.zeros((self.n_dev, n_pad, ENCODED_BYTES), dtype=np.uint8)
+        # pad rows carry seg = len(entries) — strictly after every real
+        # local segment id, so they sort last and drop out of the perm
+        seg = np.full((self.n_dev, n_pad), len(entries), dtype=np.int32)
+        for d in range(self.n_dev):
+            off = 0
+            for s, (_, b) in enumerate(dev_entries[d]):
+                m = b.n_records
+                w = min(b.keys.shape[1], ENCODED_BYTES)
+                keys[d, off : off + m, :w] = b.keys[:, :w]
+                seg[d, off : off + m] = s
+                off += m
+        self._count_dispatch(
+            self.n_dev * n_pad, total, ("mesh", self.n_dev, n_pad)
+        )
+        perm_dev = self._sort_fn(n_pad)(
+            jax.device_put(jnp.asarray(keys), self._sharding),
+            jax.device_put(jnp.asarray(seg), self._sharding),
+        )
+        return dev_entries, perm_dev
+
+    def _finish(self, handle: tuple):
+        dev_entries, perm_dev = handle
+        perm = np.asarray(perm_dev)  # blocks until every device is done
+        for d, entries in enumerate(dev_entries):
+            sizes = [b.n_records for _, b in entries]
+            local_total = sum(sizes)
+            p = perm[d]
+            p = p[p < local_total]  # pad rows pack after the real rows
+            bases = np.concatenate([[0], np.cumsum(sizes)])
+            pos = 0
+            for s, (tag, block) in enumerate(entries):
+                m = sizes[s]
+                local = p[pos : pos + m] - bases[s]
+                pos += m
+                if (
+                    local.size != m
+                    or (local < 0).any()
+                    or (local >= m).any()
+                ):
+                    raise RuntimeError(
+                        f"mesh segmented sort mixed segments: device {d} "
+                        f"segment {s} got indices outside [0, {m}) — "
+                        "executor invariant broken"
+                    )
+                local = _memcmp_touchup(block.keys, local)
+                yield tag, block.take(local)
+
+    # -- stream protocol ----------------------------------------------
+
+    def sort_iter(self, items):
+        pending: deque = deque()
+        cur: list = []
+        cur_records = 0
+        cur_bytes = 0
+        for tag, block in items:
+            if block.n_records <= 1:
+                yield tag, block
+                continue
+            cur.append((tag, block))
+            cur_records += block.n_records
+            cur_bytes += block.n_bytes
+            if (
+                len(cur) >= self.n_dev * self.max_segments
+                or cur_records >= self._slots_cap
+                or cur_bytes >= self._bytes_cap
+            ):
+                with self._timer():
+                    pending.append(self._dispatch(cur))
+                cur, cur_records, cur_bytes = [], 0, 0
+                while len(pending) >= self.depth:
+                    with self._timer():
+                        yield from self._finish(pending.popleft())
+        if cur:
+            with self._timer():
+                pending.append(self._dispatch(cur))
+        while pending:
+            with self._timer():
+                yield from self._finish(pending.popleft())
+
+
 def make_executor(
     model: rmi.RMIParams,
     *,
@@ -415,14 +608,19 @@ def make_executor(
     batch_slots: int = 0,
     batch_bytes: int = 0,
     max_segments: int = 0,
+    mesh=None,
+    axis_names=("data",),
     clock=None,
 ) -> SortExecutor:
     """Build the executor for a sort run.
 
     ``executor`` selects the implementation: ``"auto"`` (host unless
     ``device_sort``/``use_kernels`` asked for the device path, then
-    batched), ``"host"``, ``"batched"``, or ``"per_partition"`` (the
-    historical device path, kept as the dispatch-count baseline).
+    batched), ``"host"``, ``"batched"``, ``"per_partition"`` (the
+    historical device path, kept as the dispatch-count baseline), or
+    ``"mesh"`` (the flat batched graph run per device of a jax mesh
+    inside one ``shard_map`` program; ``mesh``/``axis_names`` supply the
+    topology, defaulting to a 1-D mesh over every visible device).
     """
     choice = executor or "auto"
     if choice == "auto":
@@ -433,16 +631,20 @@ def make_executor(
         return PerPartitionDeviceExecutor(
             model, use_kernels=use_kernels, clock=clock
         )
-    if choice == "batched":
-        kw: dict = {"use_kernels": use_kernels, "clock": clock}
+    if choice in ("batched", "mesh"):
+        kw: dict = {"clock": clock}
         if batch_slots:
             kw["batch_slots"] = batch_slots
         if batch_bytes:
             kw["batch_bytes"] = batch_bytes
         if max_segments:
             kw["max_segments"] = min(max_segments, MAX_SEGMENTS)
-        return BatchedDeviceExecutor(model, **kw)
+        if choice == "mesh":
+            return MeshBatchedExecutor(
+                model, mesh=mesh, axis_names=axis_names, **kw
+            )
+        return BatchedDeviceExecutor(model, use_kernels=use_kernels, **kw)
     raise ValueError(
         f"unknown executor {executor!r} "
-        "(expected auto|host|batched|per_partition)"
+        "(expected auto|host|batched|per_partition|mesh)"
     )

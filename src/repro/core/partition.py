@@ -20,6 +20,23 @@ import jax.numpy as jnp
 from repro.core import encoding, rmi
 
 
+def route_capacity(
+    n_per_device: int, n_dev: int, capacity_factor: float
+) -> int:
+    """Per-(source, destination) send-row capacity for the ``shard_map``
+    all-to-all routers (``core/distributed.py`` and ``core/terasort.py``).
+
+    One shared formula: the next power of two >= ``n_per_device *
+    capacity_factor / n_dev`` (the equi-depth expectation times the
+    headroom factor), never less than 1.  Exact powers of two are kept
+    as-is — the two builders used to disagree here (one doubled exact
+    powers, silently inflating every send buffer 2x), which is exactly
+    the kind of drift a single helper exists to prevent.
+    """
+    need = max(1, int(n_per_device * capacity_factor / n_dev))
+    return 1 << max(0, (need - 1).bit_length())
+
+
 def bucket_histogram(bucket_ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     """Per-bucket counts, (n_buckets,) int32."""
     return jnp.zeros(n_buckets, dtype=jnp.int32).at[bucket_ids].add(1)

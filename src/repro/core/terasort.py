@@ -11,18 +11,39 @@ to the device that owns its global equi-depth key range (one collective
 per chunk), and per-range spills from different chunks need no merge —
 each range is sorted once, at the end, when all its records have arrived.
 Total I/O = 2 reads + 2 writes per record regardless of dataset size;
-communication = 1-2 record crossings (pre-shuffle optional) — both
-independent of how many chunks the dataset is split into.
+communication = 1-2 index crossings (pre-shuffle optional) — both
+independent of how many chunks the dataset is split into.  Only row
+*indices* cross the wire during routing: record bytes are gathered
+host-side straight from the input block into per-range spill files.
 
-On this container "devices" are XLA host devices and the spill store is
-the local filesystem; on a real pod the same code runs with per-host NVMe
-spills (the jax program is identical — gather/scatter of shards happens
-through addressable_shards).
+Byte-identity with the single-device sorter (``external.sort_file``)
+holds for ties too: each arriving fragment is rewritten in ascending
+input order before spilling (equal full-window keys share a bucket, so
+restoring input order *within* a range restores it globally), and the
+final per-range sort is stable.
+
+Record layout is pluggable through the ``fmt`` seam (``core/format``):
+fixed-stride gensort records or delimiter-terminated lines stream through
+the same chunk loop, and ``manifest=True`` emits the v3 sidecar so
+``SortedFileIndex``/``QueryEngine`` serve the distributed output exactly
+like a single-device one.
+
+Scaling out: on this container "devices" are XLA host devices
+(``--xla_force_host_platform_device_count=N`` in ``XLA_FLAGS``, set
+before jax initializes) and the spill store is the local filesystem.  On
+a real multi-host pod each process first calls
+``launch.mesh.initialize_multiprocess(...)`` (a documented idempotent
+wrapper over ``jax.distributed.initialize``), after which
+``launch.mesh.make_data_mesh()`` spans every host and this module's
+``shard_map`` programs run unchanged — per-host spills move to local
+NVMe and each process writes the output ranges it owns.
 """
 
 from __future__ import annotations
 
+import contextlib
 import os
+import shutil
 import tempfile
 
 import numpy as np
@@ -31,10 +52,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import encoding, rmi
+from repro.core import manifest as manifest_lib
 from repro.core.executor import make_executor
-from repro.core.external import SortStats, _Timer
-from repro.core.format import GENSORT
-from repro.data import gensort
+from repro.core.format import GENSORT, RecordFormat
+from repro.core.stages.stats import PhaseClock, SortStats
 
 
 def sort_file_distributed(
@@ -43,6 +64,7 @@ def sort_file_distributed(
     mesh,
     axis_names=("data",),
     *,
+    fmt: RecordFormat = GENSORT,
     chunk_records: int = 1 << 18,
     sample_frac: float = 0.01,
     capacity_factor: float = 1.6,
@@ -50,144 +72,189 @@ def sort_file_distributed(
     device_sort: bool = False,
     use_kernels: bool = False,
     executor: str = "auto",
+    manifest: bool = False,
 ) -> SortStats:
-    """Sort a record file using the pod as the partitioning engine."""
+    """Sort a record file using the pod as the partitioning engine.
+
+    ``executor`` selects the final-pass range sorter through the shared
+    ``SortExecutor`` seam; ``"mesh"`` runs the fused batched graph per
+    device inside a ``shard_map`` program over ``mesh`` itself.  All
+    temp state (range spills, the output handle) is cleaned up on any
+    failure; a partial output file is removed rather than left behind.
+    """
     stats = SortStats()
+    clock = PhaseClock()
     n_dev = 1
     for a in axis_names:
         n_dev *= mesh.shape[a]
-    src = gensort.read_records(input_path)
-    n = src.shape[0]
+    src = fmt.read_block(input_path)
+    n = src.n_records
     stats.n_records = n
+    stats.input_bytes = src.n_bytes
+    if n == 0:
+        open(output_path, "wb").close()
+        clock.finish(stats)
+        return stats
 
     # --- train the CDF model on a striped sample (global key ranges)
-    with _Timer(stats, "train"):
+    with clock.timer("train"):
         take = max(int(n * sample_frac), 4096)
         idx = np.linspace(0, n - 1, min(take, n)).astype(np.int64)
-        model = rmi.fit(np.array(src[idx, : gensort.KEY_BYTES]))
-        stats.bytes_read += len(idx) * gensort.KEY_BYTES
+        model = rmi.fit(np.ascontiguousarray(src.keys[idx]))
+        stats.bytes_read += int(idx.shape[0] * src.keys.shape[1])
 
     # --- chunk loop: pod partitions each chunk to its owner devices
-    chunk_records = (chunk_records // n_dev) * n_dev
+    chunk_records = max((chunk_records // n_dev) * n_dev, n_dev)
     sh = NamedSharding(mesh, P(axis_names))
     tmp = tempfile.mkdtemp(prefix="terasort_", dir=workdir)
     range_paths = [os.path.join(tmp, f"r{d:05d}.bin") for d in range(n_dev)]
-    range_files = [open(p, "wb", buffering=1 << 20) for p in range_paths]
+    range_files: list = []
+    out = None
+    created_output = False
+    ok = False
+    try:
+        range_files = [open(p, "wb", buffering=1 << 20) for p in range_paths]
+        range_counts = [0] * n_dev
+        range_bytes = [0] * n_dev
 
-    # jit once per (chunk shape): route + balance, NO local sort yet (the
-    # paper's insight — partitions are sorted once, after all arrivals)
-    route_fns = {}  # capacity_factor -> jitted route fn (lazily built)
+        # jit once per (chunk shape): route + balance, NO local sort yet
+        # (the paper's insight — partitions sort once, after all arrivals)
+        route_fns = {}  # capacity_factor -> jitted route fn (lazily built)
 
-    def route(hi, lo, val, factor):
-        if factor not in route_fns:
-            route_fns[factor] = _make_route_fn(
-                mesh, axis_names, model, chunk_records // n_dev, factor
-            )
-        return route_fns[factor](hi, lo, val)
+        def route(hi, lo, val, factor):
+            if factor not in route_fns:
+                route_fns[factor] = _make_route_fn(
+                    mesh, axis_names, model, chunk_records // n_dev, factor
+                )
+            return route_fns[factor](hi, lo, val)
 
-    with _Timer(stats, "partition"):
-        for off in range(0, n, chunk_records):
-            chunk = np.asarray(src[off : off + chunk_records])
-            m = chunk.shape[0]
-            stats.bytes_read += chunk.nbytes
-            pad = (-m) % n_dev
-            if pad:
-                filler = np.zeros((pad, gensort.RECORD_BYTES), np.uint8)
-                chunk = np.concatenate([chunk, filler])
-            hi, lo = encoding.encode_np(chunk[:, : gensort.KEY_BYTES])
-            if pad:  # sentinel keys: routed to the last device, dropped
-                hi[m:] = encoding.SENTINEL
-                lo[m:] = encoding.SENTINEL
-            val = np.arange(chunk.shape[0], dtype=np.int32)
-            args = (
-                jax.device_put(jnp.asarray(hi), sh),
-                jax.device_put(jnp.asarray(lo), sh),
-                jax.device_put(jnp.asarray(val), sh),
-            )
-            # graceful degradation: rare pathological chunks re-run with a
-            # doubled capacity (lossless — overflow is always detected)
-            factor = capacity_factor
-            for _ in range(6):
-                out_hi, out_lo, out_val, n_valid, lost = route(*args, factor)
-                if int(np.asarray(lost).sum()) == 0:
-                    break
-                stats.fallbacks += 1
-                factor *= 2.0
-            else:
-                raise RuntimeError("capacity overflow persisted at 32x")
-            # spill each device's received range to its range file
-            nv = np.asarray(n_valid).reshape(n_dev)
-            ov = np.asarray(out_val).reshape(n_dev, -1)
+        with clock.timer("partition"):
+            for off in range(0, n, chunk_records):
+                cb = src.slice_records(off, min(off + chunk_records, n))
+                m = cb.n_records
+                stats.bytes_read += cb.n_bytes
+                hi, lo = encoding.encode_np(cb.keys)
+                pad = (-m) % n_dev
+                if pad:  # sentinel rows: masked in the router, never sent
+                    fill = np.full(pad, encoding.SENTINEL)
+                    hi = np.concatenate([hi, fill])
+                    lo = np.concatenate([lo, fill])
+                val = np.arange(m + pad, dtype=np.int32)
+                args = (
+                    jax.device_put(jnp.asarray(hi), sh),
+                    jax.device_put(jnp.asarray(lo), sh),
+                    jax.device_put(jnp.asarray(val), sh),
+                )
+                # graceful degradation: rare pathological chunks re-run
+                # with a doubled capacity (lossless — overflow is always
+                # detected before anything is dropped)
+                factor = capacity_factor
+                for _ in range(6):
+                    out_val, n_valid, lost = route(*args, factor)
+                    if int(np.asarray(lost).sum()) == 0:
+                        break
+                    stats.fallbacks += 1
+                    factor *= 2.0
+                else:
+                    raise RuntimeError("capacity overflow persisted at 32x")
+                # spill each device's received range to its range file,
+                # in ascending input order (byte-identical tie handling:
+                # equal keys share a bucket, so input order within a
+                # range is input order globally)
+                nv = np.asarray(n_valid).reshape(n_dev)
+                ov = np.asarray(out_val).reshape(n_dev, -1)
+                for d in range(n_dev):
+                    rows = ov[d, : nv[d]]
+                    rows = np.sort(rows[(rows >= 0) & (rows < m)])
+                    if rows.size == 0:
+                        continue
+                    payload = cb.gather_bytes(rows)
+                    range_files[d].write(payload)
+                    range_counts[d] += int(rows.size)
+                    range_bytes[d] += len(payload)
+                    stats.bytes_written += len(payload)
+        for f in range_files:
+            f.close()
+
+        # --- final pass: sort each range once, concatenate at offsets.
+        # Ranges stream through the shared SortExecutor seam (DESIGN.md
+        # §10): host LearnedSort by default, the batched device executor,
+        # or the mesh executor (the same fused graph per device inside
+        # shard_map) — ranges are consecutive key ranges of one model,
+        # exactly the segment contract the fused graph packs into
+        # super-batches, and its double-buffering overlaps range reads
+        # with in-flight sorts.
+        stats.partition_counts = list(range_counts)
+        offsets = np.concatenate([[0], np.cumsum(range_bytes)[:-1]])
+        with open(output_path, "wb") as fh:
+            fh.truncate(int(sum(range_bytes)))
+        created_output = True
+
+        ex = make_executor(
+            model,
+            device_sort=device_sort,
+            use_kernels=use_kernels,
+            executor=executor,
+            mesh=mesh,
+            axis_names=axis_names,
+            clock=clock,
+        )
+        stats.executor = ex.name
+
+        def ranges():
             for d in range(n_dev):
-                rows = ov[d, : nv[d]]
-                rows = rows[rows < m]  # drop sentinel padding rows
-                frag = chunk[rows]
-                range_files[d].write(frag.tobytes())
-                stats.bytes_written += frag.nbytes
-    for f in range_files:
-        f.close()
+                if range_counts[d] == 0:
+                    os.unlink(range_paths[d])
+                    continue
+                with clock.timer("sort_read"):
+                    blob = np.fromfile(range_paths[d], dtype=np.uint8)
+                    stats.bytes_read += blob.nbytes
+                    os.unlink(range_paths[d])
+                # parse_blob only needs the buffer protocol — no copy
+                yield int(offsets[d]), fmt.parse_blob(blob)
 
-    # --- final pass: sort each range once, concatenate at offsets.
-    # Ranges stream through the shared SortExecutor seam (DESIGN.md §10):
-    # the host LearnedSort by default, or the batched device-resident
-    # executor — ranges are consecutive key ranges of one model, exactly
-    # the segment contract the fused graph packs into super-batches, and
-    # its double-buffering overlaps range reads with in-flight sorts.
-    sizes = [os.path.getsize(p) // gensort.RECORD_BYTES for p in range_paths]
-    stats.partition_counts = sizes
-    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]) * gensort.RECORD_BYTES
-    with open(output_path, "wb") as out:
-        out.truncate(n * gensort.RECORD_BYTES)
-    class _StatsClock:
-        """Adapts the sequential ``_Timer`` accounting to the executor's
-        clock protocol (counters land via the executor attrs below)."""
+        out = open(output_path, "r+b")
+        for at, block in ex.sort_iter(ranges()):
+            with clock.timer("write"):
+                out.seek(at)
+                out.write(block.tobytes())
+                stats.bytes_written += block.n_bytes
+        out.close()
+        out = None
+        stats.fallbacks += ex.fallbacks
 
-        def timer(self, phase):
-            return _Timer(stats, phase)
-
-        def add_counter(self, name, value=1):
-            pass
-
-    ex = make_executor(
-        model,
-        device_sort=device_sort,
-        use_kernels=use_kernels,
-        executor=executor,
-        clock=_StatsClock(),
-    )
-    stats.executor = ex.name
-
-    def ranges():
-        for d in range(n_dev):
-            if sizes[d] == 0:
-                os.unlink(range_paths[d])
-                continue
-            with _Timer(stats, "sort_read"):
-                blob = np.fromfile(range_paths[d], dtype=np.uint8)
-                stats.bytes_read += blob.nbytes
-                os.unlink(range_paths[d])
-            # parse_blob only needs the buffer protocol — no copy
-            yield offsets[d], GENSORT.parse_blob(blob)
-
-    out = open(output_path, "r+b")
-    for off, block in ex.sort_iter(ranges()):
-        with _Timer(stats, "write"):
-            out.seek(off)
-            out.write(block.tobytes())
-            stats.bytes_written += block.n_bytes
-    out.close()
-    stats.device_dispatches = ex.dispatches
-    if ex.batch_slots:
-        stats.batch_occupancy = ex.occupancy
-    stats.jit_compiles = ex.jit_compiles
-    stats.fallbacks += ex.fallbacks
-    os.rmdir(tmp)
+        if manifest:
+            with clock.timer("manifest"):
+                m3 = manifest_lib.build(
+                    model, range_counts, output_path, fmt=fmt
+                )
+                mp = manifest_lib.manifest_path(output_path)
+                manifest_lib.save(m3, mp)
+                stats.manifest_path = mp
+        ok = True
+    finally:
+        # no resource outlives a failure: spill files and the spill dir
+        # go unconditionally, the output handle is closed, and a partial
+        # output file is removed rather than left looking sorted
+        for f in range_files:
+            if not f.closed:
+                f.close()
+        if out is not None:
+            out.close()
+        shutil.rmtree(tmp, ignore_errors=True)
+        if not ok and created_output:
+            with contextlib.suppress(OSError):
+                os.unlink(output_path)
+    clock.finish(stats)
     return stats
 
 
 def _make_route_fn(mesh, axis_names, model, n_per_device, capacity_factor):
     """Route-only variant of distributed.make_sort_fn (no device sort —
-    ranges are spilled and sorted once at the end)."""
+    ranges are spilled and sorted once at the end).  Only row indices
+    (``val``) cross the wire; keys are used locally for bucketing and
+    dropped.  Returns ``fn(hi, lo, val) -> (val_routed, n_valid, lost)``
+    with ``val_routed`` per-device arrival-compacted row indices."""
     from jax.experimental.shard_map import shard_map
 
     from repro.core import partition
@@ -197,9 +264,7 @@ def _make_route_fn(mesh, axis_names, model, n_per_device, capacity_factor):
     n_dev = 1
     for a in axis_names:
         n_dev *= mesh.shape[a]
-    capacity = 1 << max(
-        0, (int(n_per_device * capacity_factor / n_dev)).bit_length()
-    )
+    capacity = partition.route_capacity(n_per_device, n_dev, capacity_factor)
 
     def local_fn(hi, lo, val):
         def transpose_shuffle(x):
@@ -212,39 +277,34 @@ def _make_route_fn(mesh, axis_names, model, n_per_device, capacity_factor):
         lo = transpose_shuffle(lo)
         val = transpose_shuffle(val)
         bucket = rmi.predict_bucket(model, hi, lo, n_dev)
+        # sentinel padding rows (short final chunk) must not consume real
+        # bucket capacity: they used to route to the last device, where a
+        # tiny tail chunk could trigger spurious capacity-doubling
+        # retries and inflate stats.fallbacks.  Divert them to an extra
+        # discard bucket that is sliced off before the all-to-all.
+        is_pad = (hi == SENTINEL) & (lo == SENTINEL)
+        bucket = jnp.where(is_pad, n_dev, bucket)
         gather_idx, valid, counts = partition.bucket_matrix(
-            bucket, n_dev, capacity
+            bucket, n_dev + 1, capacity
         )
-        send_hi = jnp.where(valid, jnp.take(hi, gather_idx), SENTINEL)
-        send_lo = jnp.where(valid, jnp.take(lo, gather_idx), SENTINEL)
+        gather_idx = gather_idx[:n_dev]
+        valid = valid[:n_dev]
+        lost = jnp.maximum(counts[:n_dev] - capacity, 0).sum()
         send_val = jnp.where(valid, jnp.take(val, gather_idx), -1)
-        recv_hi = jax.lax.all_to_all(
-            send_hi, axis_names, 0, 0, tiled=True
-        ).reshape(-1)
-        recv_lo = jax.lax.all_to_all(
-            send_lo, axis_names, 0, 0, tiled=True
-        ).reshape(-1)
         recv_val = jax.lax.all_to_all(
             send_val, axis_names, 0, 0, tiled=True
         ).reshape(-1)
-        lost = jnp.maximum(counts - capacity, 0).sum()
-        n_valid = (recv_hi != SENTINEL).sum().astype(jnp.int32)
+        n_valid = (recv_val >= 0).sum().astype(jnp.int32)
         # compact valid records to the front (stable by arrival)
-        order = jnp.argsort(recv_hi == SENTINEL, stable=True)
-        return (
-            jnp.take(recv_hi, order),
-            jnp.take(recv_lo, order),
-            jnp.take(recv_val, order),
-            n_valid[None],
-            lost[None],
-        )
+        order = jnp.argsort(recv_val < 0, stable=True)
+        return jnp.take(recv_val, order), n_valid[None], lost[None]
 
     spec = P(axis_names)
     fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(spec, spec, spec),
-        out_specs=(spec, spec, spec, spec, spec),
+        out_specs=(spec, spec, spec),
         check_rep=False,
     )
     return jax.jit(fn)

@@ -468,3 +468,45 @@ def test_adversarial_manifest_band_is_true_bound(workdir, tmp_path, shape):
     )
     # present-key lower bounds inside a true band never need the fallback
     assert index.fallbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# Distributed differential (DESIGN.md §13): sort_file_distributed must be
+# byte-identical to the single-device sorter — same oracle, both final-pass
+# executors, both formats, uniform + skewed.  Runs on an in-process 1-device
+# mesh (multi-device byte-identity runs in the test_terasort.py subprocess
+# harness, which can set XLA_FLAGS before jax initializes).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dist_executor", ["host", "mesh"])
+@pytest.mark.parametrize("shape", ["uniform", "skewed"])
+@pytest.mark.parametrize("fmt_kind", ["fixed", "line"])
+def test_distributed_differential(
+    workdir, tmp_path, fmt_kind, shape, dist_executor
+):
+    from repro.core import terasort
+    from repro.launch.mesh import make_data_mesh
+
+    inp, oracle, n, fmt, refsum = _corpus(workdir, fmt_kind, shape)
+    out = str(tmp_path / "out.bin")
+    stats = terasort.sort_file_distributed(
+        inp, out, make_data_mesh(1), fmt=fmt,
+        chunk_records=max(1024, n // 3),  # several chunks at tier-1 scale
+        executor=dist_executor,
+        workdir=str(tmp_path),
+        manifest=True,
+    )
+    got = open(out, "rb").read()
+    assert _sha(got) == _sha(oracle), (
+        f"distributed {fmt_kind}/{shape} executor={dist_executor}: output "
+        f"differs from sorted() oracle ({len(got)} vs {len(oracle)} bytes)"
+    )
+    assert stats.n_records == n
+    assert stats.executor == dist_executor
+    assert validate.validate_file(out, refsum, n, fmt=fmt)["ok"]
+    # manifest sidecar emitted and spill state fully cleaned up
+    assert stats.manifest_path and os.path.exists(stats.manifest_path)
+    assert not [
+        p for p in os.listdir(tmp_path) if p.startswith("terasort_")
+    ]

@@ -44,3 +44,34 @@ def test_histogram_and_offsets():
     perm, starts, counts = partition.bucket_offsets(ids, 4)
     np.testing.assert_array_equal(np.asarray(counts), [1, 2, 0, 1])
     np.testing.assert_array_equal(np.asarray(starts), [0, 1, 3, 3])
+
+
+def test_route_capacity_shared_formula():
+    """One capacity formula for both shard_map routers (terasort used to
+    double exact powers of two via ``1 << x.bit_length()``)."""
+    # exact powers of two stay as-is — the drift this helper fixes
+    for need in (1, 2, 4, 64, 1024):
+        n_per_device, n_dev = need * 8, 8  # factor 1.0 -> need exactly
+        assert partition.route_capacity(n_per_device, n_dev, 1.0) == need
+    # otherwise: next power of two >= the equi-depth expectation
+    assert partition.route_capacity(4096, 8, 1.6) == 1024  # need 819
+    assert partition.route_capacity(20, 8, 1.6) == 4  # need 4 (exact)
+    assert partition.route_capacity(100, 8, 1.6) == 32  # need 20
+    # degenerate inputs never collapse below one send row
+    assert partition.route_capacity(0, 8, 1.6) == 1
+    assert partition.route_capacity(3, 64, 0.5) == 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.integers(0, 1 << 20),
+    st.integers(1, 64),
+    st.integers(1, 80),  # capacity factor in tenths: 0.1 .. 8.0
+)
+def test_route_capacity_bounds(n_per_device, n_dev, tenths):
+    factor = tenths / 10.0
+    cap = partition.route_capacity(n_per_device, n_dev, factor)
+    need = max(1, int(n_per_device * factor / n_dev))
+    assert cap >= need  # never under-provisions
+    assert cap & (cap - 1) == 0  # power of two (all-to-all tiling)
+    assert cap < 2 * need or cap == 1  # and never more than 2x over
