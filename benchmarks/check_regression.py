@@ -18,7 +18,13 @@ Four hard gates (exit 1) plus an informational report:
 * **crossover regression**: when the baseline carries a corpus-size
   sweep (schema 3), the elsar-vs-extms crossover point may not
   disappear, nor drift beyond 2x the baseline's (tolerant on purpose:
-  the sweep is coarse and the win margin near the crossover is small).
+  the sweep is coarse and the win margin near the crossover is small);
+* **serve p99-under-load**: when the baseline carries a ``serve``
+  section, the continuous-batching server must keep >= 2x the serial
+  per-request capacity at equal p99 (a same-run ratio, immune to
+  runner speed), the overload probe must shed (> 0) instead of
+  queueing without bound, and its p99 may not exceed 10x the SLO.
+  Informational on the first landing (no baseline serve section yet).
 
 Cross-run absolute sort/query/join *rates* are reported as deltas but
 never gate: shared CI runners are too noisy for wall-clock thresholds,
@@ -35,6 +41,8 @@ DISPATCH_REGRESSION_LIMIT = 1.20  # >20% more dispatches than baseline fails
 BATCHING_FLOOR = 4  # batched must be >= 4x below per-partition
 RATE_FLOOR = 0.90  # batched rate >= 0.9x per-partition, same run
 CROSSOVER_DRIFT_LIMIT = 2.0  # crossover may not drift past 2x baseline
+SERVE_SPEEDUP_FLOOR = 2.0  # batched capacity >= 2x serial, same run
+SERVE_OVERLOAD_P99_X = 10.0  # overload p99 <= 10x the SLO (shed, don't queue)
 
 
 def _executor_row(data: dict, name: str) -> dict:
@@ -137,6 +145,42 @@ def main(argv: "list[str] | None" = None) -> int:
             f"{c_sweep.get('crossover_records')} records "
             f"(no baseline sweep — informational)"
         )
+
+    # serve p99-under-load (schema 3 + serve on both sides; a baseline
+    # without serve rows hasn't recorded the axis yet — report only)
+    c_srv = cur.get("serve") or {}
+    if c_srv:
+        over = c_srv.get("overload", {})
+        line = (
+            f"serve capacity: serial={c_srv['serial_capacity_qps']:.0f} "
+            f"batched={c_srv['batched_capacity_qps']:.0f} qps "
+            f"({c_srv['speedup']:.2f}x) at p99<={c_srv['slo_ms']}ms; "
+            f"overload shed={over.get('shed')} "
+            f"p99={over.get('p99_ms', float('nan')):.1f}ms"
+        )
+        if base.get("serve"):
+            print(line)
+            if c_srv["speedup"] < SERVE_SPEEDUP_FLOOR:
+                failures.append(
+                    f"serve batching win lost: batched capacity is "
+                    f"{c_srv['speedup']:.2f}x serial "
+                    f"(floor {SERVE_SPEEDUP_FLOOR}x, same run)"
+                )
+            if not over.get("shed"):
+                failures.append(
+                    "serve overload probe shed nothing — admission "
+                    "control is not engaging"
+                )
+            elif over["p99_ms"] > c_srv["slo_ms"] * SERVE_OVERLOAD_P99_X:
+                failures.append(
+                    f"serve p99 under overload unbounded: "
+                    f"{over['p99_ms']:.1f}ms > "
+                    f"{SERVE_OVERLOAD_P99_X}x SLO "
+                    f"({c_srv['slo_ms']}ms) — shedding is not keeping "
+                    f"the queue bounded"
+                )
+        else:
+            print(f"{line} (no baseline serve section — informational)")
 
     # fast-path health: fallbacks on the uniform bench corpus mean the
     # fused graph is not actually running (informational — duplicate-

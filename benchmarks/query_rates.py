@@ -1,17 +1,37 @@
-"""Serving rates over sorted output (DESIGN.md §7): batched point lookups
-and concurrent range scans through the learned-index manifest, on the
-axes batch size x point/range mix x uniform/skewed gensort."""
+"""Serving rates over sorted output (DESIGN.md §7, §14).
+
+Two suites share one sorted corpus:
+
+* :func:`run` — closed-loop ``QueryEngine`` rates on the axes batch
+  size x point/range mix x uniform/skewed gensort (the historical
+  figure).
+* :func:`run_open_loop` — the **server** benchmark: Poisson arrivals at
+  swept offered qps against a live :class:`QueryServer`, serial
+  per-request dispatch (``max_batch=1``) vs the continuous-batching
+  scheduler, identical corpus/cache/engine on both sides.  Arrivals are
+  open-loop (the generator never waits for responses), so an overloaded
+  server shows up as shed requests + bounded p99, not as a slowed-down
+  client.  Reports per-mode capacity (max achieved qps with p99 under
+  the SLO) and an overload probe proving load-shedding keeps p99
+  bounded.
+"""
 
 from __future__ import annotations
 
+import asyncio
 import os
 import tempfile
 
+import numpy as np
+
 from benchmarks import common
 from repro.core import external
+from repro.core.config import ServeConfig, SortConfig
 from repro.launch.query import make_workload
 from repro.serve.index import SortedFileIndex
 from repro.serve.query_engine import QueryEngine
+from repro.serve.scheduler import Overloaded
+from repro.serve.server import QueryServer
 
 BATCHES = (1, 64)
 # fraction of the workload that is point lookups (rest: range scans)
@@ -19,6 +39,18 @@ POINT_MIXES = (1.0, 0.9, 0.0)
 N_POINTS = 2048
 N_RANGES = 64
 RANGE_RECORDS = 500
+
+# open-loop sweep: offered arrival rates and the latency SLO that
+# defines "capacity" (max achieved qps whose p99 stays under it)
+OPEN_LOOP_OFFERED = (500, 1000, 2000, 4000, 8000)
+OPEN_LOOP_SLO_MS = 25.0
+OPEN_LOOP_DURATION_S = 1.0
+# no transport: the sweep drives the admission+batching core in-process
+# (the socket path is covered by tests/test_serve.py)
+_SERVE_MODES = {
+    "serial": dict(max_batch=1, max_wait_ms=0.0),
+    "batched": dict(max_batch=64, max_wait_ms=2.0),
+}
 
 
 def run(n_records: int = 1_000_000, n_workers: int = 4) -> list[dict]:
@@ -29,8 +61,9 @@ def run(n_records: int = 1_000_000, n_workers: int = 4) -> list[dict]:
         with tempfile.TemporaryDirectory(dir=common.CACHE_DIR) as tmp:
             out = os.path.join(tmp, "sorted.bin")
             external.sort_file(
-                path, out, memory_budget_bytes=128 << 20, n_readers=2,
-                manifest=True,
+                path, out,
+                SortConfig(memory_budget_bytes=128 << 20, n_readers=2,
+                           manifest=True),
             )
             index = SortedFileIndex.open(out)
             points, ranges = make_workload(
@@ -59,6 +92,130 @@ def run(n_records: int = 1_000_000, n_workers: int = 4) -> list[dict]:
     return rows
 
 
+async def _open_loop_pass(
+    index: SortedFileIndex,
+    keys: "list[bytes]",
+    cfg: ServeConfig,
+    offered_qps: float,
+    duration_s: float,
+    seed: int,
+) -> dict:
+    """One open-loop measurement: Poisson arrivals at ``offered_qps``
+    for ``duration_s`` against a fresh server; never waits on responses
+    while sending."""
+    server = await QueryServer(index, cfg, own_indexes=False).start()
+    rng = np.random.default_rng(seed)
+    n_total = int(offered_qps * duration_s)
+    gaps = rng.exponential(1.0 / offered_qps, size=n_total)
+    picks = rng.integers(0, len(keys), size=n_total)
+    loop = asyncio.get_running_loop()
+    futs, shed = [], 0
+    t0 = loop.time()
+    due = 0.0
+    for i in range(n_total):
+        due += gaps[i]
+        ahead = (t0 + due) - loop.time()
+        if ahead > 0:
+            await asyncio.sleep(ahead)
+        elif i % 32 == 0:
+            # behind schedule: still yield so the batch loop makes
+            # progress — an open-loop generator outpacing the server is
+            # the overload scenario, not a benchmark artifact
+            await asyncio.sleep(0)
+        try:
+            futs.append(server.scheduler.submit("point", keys[picks[i]]))
+        except Overloaded:
+            shed += 1
+    results = await asyncio.gather(*futs, return_exceptions=True)
+    t_done = loop.time()
+    await server.stop()
+    completed = sum(
+        1 for r in results if isinstance(r, dict) and r.get("ok")
+    )
+    s = server.stats
+    return {
+        "mode": "serial" if cfg.max_batch == 1 else "batched",
+        "offered_qps": float(offered_qps),
+        "achieved_qps": completed / max(t_done - t0, 1e-9),
+        "p50_ms": s.latency_ms(50),
+        "p99_ms": s.latency_ms(99),
+        "shed": shed,
+        "completed": completed,
+        "batches": s.n_batches,
+        "batch_occupancy": s.batch_occupancy,
+        "cache_hit_rate": s.cache_hit_rate,
+    }
+
+
+def _capacity(rows: "list[dict]", mode: str, slo_ms: float) -> float:
+    ok = [
+        r["achieved_qps"]
+        for r in rows
+        if r["mode"] == mode and r["p99_ms"] <= slo_ms and not r["shed"]
+    ]
+    return max(ok) if ok else 0.0
+
+
+def run_open_loop(
+    n_records: int = 100_000,
+    duration_s: float = OPEN_LOOP_DURATION_S,
+    offered: "tuple[float, ...]" = OPEN_LOOP_OFFERED,
+    slo_ms: float = OPEN_LOOP_SLO_MS,
+) -> dict:
+    """The serve acceptance benchmark: serial vs batched capacity under
+    open-loop Poisson load, plus an overload probe (shed > 0, p99 still
+    bounded).  Returns the ``serve`` section of the bench JSON."""
+    path, _ = common.dataset(n_records, skewed=False)
+    with tempfile.TemporaryDirectory(dir=common.CACHE_DIR) as tmp:
+        out = os.path.join(tmp, "sorted.bin")
+        external.sort_file(
+            path, out,
+            SortConfig(memory_budget_bytes=128 << 20, n_readers=2,
+                       manifest=True),
+        )
+        index = SortedFileIndex.open(out)
+        points, _ = make_workload(index, 4096, 0, 0, seed=0)
+        keys = [p.tobytes() for p in points]
+
+        async def sweep() -> dict:
+            rows = []
+            for mode, knobs in _SERVE_MODES.items():
+                cfg = ServeConfig(host="", port=0, **knobs)
+                # warm pass: touch the cache + numpy paths off the clock
+                await _open_loop_pass(
+                    index, keys, cfg, min(offered), 0.1, seed=1
+                )
+                for qps in offered:
+                    rows.append(await _open_loop_pass(
+                        index, keys, cfg, qps, duration_s, seed=2
+                    ))
+            # overload probe: tiny admission queue, offered far past
+            # capacity — the server must shed rather than queue without
+            # bound, so p99 stays in the same order as the SLO
+            over_cfg = ServeConfig(
+                host="", port=0, queue_bound=128,
+                **_SERVE_MODES["batched"],
+            )
+            over = await _open_loop_pass(
+                index, keys, over_cfg, max(offered) * 4, duration_s,
+                seed=3,
+            )
+            return {"rows": rows, "overload": over}
+
+        data = asyncio.run(sweep())
+        index.close()
+    serial = _capacity(data["rows"], "serial", slo_ms)
+    batched = _capacity(data["rows"], "batched", slo_ms)
+    data.update(
+        slo_ms=slo_ms,
+        duration_s=duration_s,
+        serial_capacity_qps=serial,
+        batched_capacity_qps=batched,
+        speedup=batched / serial if serial else float("inf"),
+    )
+    return data
+
+
 def main(n_records: int = 1_000_000):
     for r in run(n_records):
         common.emit(
@@ -69,5 +226,57 @@ def main(n_records: int = 1_000_000):
         )
 
 
+def main_open_loop(argv: "list[str] | None" = None) -> int:
+    """CLI for the serve-smoke CI job: run the sweep at small scale and
+    enforce a tolerant batched-over-serial floor (the full 2x bar is
+    gated via check_regression.py once a baseline carries serve rows)."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", type=int, default=100_000)
+    ap.add_argument("--duration", type=float, default=OPEN_LOOP_DURATION_S)
+    ap.add_argument("--offered", default=",".join(
+        str(q) for q in OPEN_LOOP_OFFERED))
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless batched capacity >= this x serial")
+    ap.add_argument("--json", default=None, help="also write the section")
+    args = ap.parse_args(argv)
+    data = run_open_loop(
+        args.records, args.duration,
+        tuple(float(q) for q in args.offered.split(",")),
+    )
+    for r in data["rows"]:
+        print(f"serve_{r['mode']}_q{int(r['offered_qps'])}: "
+              f"achieved={r['achieved_qps']:.0f}qps "
+              f"p50={r['p50_ms']:.3f}ms p99={r['p99_ms']:.3f}ms "
+              f"shed={r['shed']} occupancy={r['batch_occupancy']:.1f}")
+    o = data["overload"]
+    print(f"serve_overload: offered={o['offered_qps']:.0f} "
+          f"achieved={o['achieved_qps']:.0f}qps p99={o['p99_ms']:.3f}ms "
+          f"shed={o['shed']}")
+    print(f"serve capacity (p99<={data['slo_ms']}ms): "
+          f"serial={data['serial_capacity_qps']:.0f}qps "
+          f"batched={data['batched_capacity_qps']:.0f}qps "
+          f"speedup={data['speedup']:.2f}x")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(data, f, indent=2, default=float)
+    if o["shed"] == 0:
+        print("FAIL: overload probe shed nothing — admission control "
+              "is not engaging")
+        return 1
+    if args.min_speedup and data["speedup"] < args.min_speedup:
+        print(f"FAIL: batched/serial capacity {data['speedup']:.2f}x "
+              f"< required {args.min_speedup}x")
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
+    import sys
+
+    if "--open-loop" in sys.argv:
+        sys.argv.remove("--open-loop")
+        raise SystemExit(main_open_loop(sys.argv[1:]))
     main(int(os.environ.get("REPRO_BENCH_RECORDS", 1_000_000)))

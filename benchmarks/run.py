@@ -54,6 +54,10 @@ def smoke(
         # device-executor axis (DESIGN.md §10): batched super-batches vs
         # the per-partition dispatch baseline
         "executor": sort_rates.run_executor(n),
+        # serve axis (DESIGN.md §14): open-loop qps sweep, serial vs
+        # continuous-batching dispatch + the overload shed probe — on
+        # the acceptance corpus size regardless of REPRO_BENCH_RECORDS
+        "serve": query_rates.run_open_loop(min(n, 100_000)),
     }
     if dist == "adversarial":
         data["adversarial"] = sort_rates.run_adversarial(n)
@@ -86,11 +90,16 @@ def smoke(
         f" mesh_{r['executor']}={r['rate_mb_s']:.1f}MB/s"
         for r in data.get("mesh", ())
     )
+    srv = data["serve"]
     print(
         f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
         f"query={qps:.0f}q/s join={join_mb:.1f}MB/s "
         f"dispatches={disp.get('batched')}/{disp.get('per_partition')} "
-        f"(batched/per-partition){adv}{xover}{mesh_s} -> {json_path}"
+        f"(batched/per-partition) "
+        f"serve={srv['batched_capacity_qps']:.0f}q/s@p99<"
+        f"{srv['slo_ms']:.0f}ms ({srv['speedup']:.1f}x serial, "
+        f"overload_shed={srv['overload']['shed']})"
+        f"{adv}{xover}{mesh_s} -> {json_path}"
     )
 
 

@@ -1,0 +1,257 @@
+"""The unified public configuration surface (DESIGN.md §14).
+
+Three frozen dataclasses describe every user-facing knob in the system:
+
+* :class:`SortConfig` — one file-to-file sort.  ``external.sort_file``
+  historically grew ~20 keyword arguments; they all live here now, with
+  the same names and defaults, and ``sort_file(input, output,
+  config=SortConfig(...), **overrides)`` is the supported call shape.
+  Bare legacy keywords still work through :func:`coerce_sort_config`
+  (one ``DeprecationWarning`` per process, behavior unchanged).
+* :class:`ExecutorConfig` — the sort-executor seam
+  (``core/executor.make_executor``): implementation choice, batch
+  bounds, mesh topology.
+* :class:`ServeConfig` — the long-lived query server
+  (``serve/server.QueryServer``): admission window, queue bound, cache
+  budget, transport, drain timeout.
+
+The CLI launchers (``launch/query.py``, ``launch/ops.py``,
+``launch/serve.py``) build their argparse surfaces from the same
+dataclasses via :func:`add_sort_cli_args` / :func:`add_serve_cli_args`
+and materialize configs with :func:`sort_config_from_args` /
+:func:`serve_config_from_args` — one source of truth for names,
+defaults, and help text instead of hand-copied argument lists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+# ---------------------------------------------------------------------------
+# SortConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SortConfig:
+    """Every knob of one ``sort_file`` run (defaults = historical
+    behavior).  Field semantics are documented on ``external.sort_file``;
+    the 0-valued knobs (``n_partitions``, ``flush_bytes``,
+    ``batch_segments``) mean *auto-tuned by the planner*."""
+
+    memory_budget_bytes: int = 256 << 20
+    batch_records: int = 500_000
+    n_partitions: int = 0
+    sample_frac: float = 0.01
+    n_leaf: int = 0
+    workdir: "str | None" = None
+    use_kernels: bool = False
+    device_sort: bool = False
+    n_readers: int = 1
+    n_sorters: int = 1
+    manifest: bool = False
+    fmt: "object | None" = None
+    flush_bytes: int = 0
+    model: "object | None" = None
+    executor: str = "auto"
+    partitioner: str = "auto"
+    batch_segments: int = 0
+    model_cache: "object | None" = None
+
+    def replace(self, **overrides) -> "SortConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def to_pipeline(self):
+        """The internal :class:`repro.core.pipeline.SortPipelineConfig`
+        this public config compiles to (lazy import: pipeline pulls in
+        the stage modules)."""
+        from repro.core.pipeline import SortPipelineConfig
+
+        return SortPipelineConfig.from_sort_config(self)
+
+    def executor_config(self) -> "ExecutorConfig":
+        """The matching executor-seam config (``make_executor``)."""
+        return ExecutorConfig(
+            executor=self.executor,
+            device_sort=self.device_sort or self.use_kernels,
+            use_kernels=self.use_kernels,
+            batch_bytes=self.memory_budget_bytes,
+            max_segments=self.batch_segments,
+        )
+
+
+_SORT_FIELDS = frozenset(f.name for f in dataclasses.fields(SortConfig))
+_warned_legacy_kwargs = False
+
+
+def coerce_sort_config(config, overrides: dict, *, warn=True) -> SortConfig:
+    """The single legacy-keyword shim behind ``external.sort_file``.
+
+    ``config=None`` with bare keywords is the pre-PR-9 call shape: it
+    still builds the identical config (proven by the differential grid)
+    but warns ``DeprecationWarning`` once per process.  With an explicit
+    ``config=``, keywords are first-class per-call overrides — no
+    warning.  ``keep_stats`` is accepted and dropped (stats are always
+    kept, as since PR 1).  ``warn=False`` lets callers whose keyword
+    surface is *not* deprecated (``operators.sort_co_partitioned``)
+    reuse the coercion.
+    """
+    global _warned_legacy_kwargs
+    overrides = dict(overrides)
+    overrides.pop("keep_stats", None)
+    unknown = set(overrides) - _SORT_FIELDS
+    if unknown:
+        raise TypeError(
+            f"sort_file() got unexpected keyword arguments "
+            f"{sorted(unknown)} — valid SortConfig fields: "
+            f"{sorted(_SORT_FIELDS)}"
+        )
+    if config is None:
+        if overrides and warn and not _warned_legacy_kwargs:
+            _warned_legacy_kwargs = True
+            warnings.warn(
+                "bare keyword arguments to sort_file() are deprecated; "
+                "pass config=SortConfig(...) (keywords on top of an "
+                "explicit config stay supported as per-call overrides)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        config = SortConfig()
+    elif not isinstance(config, SortConfig):
+        raise TypeError(
+            f"config must be a SortConfig, got {type(config).__name__}"
+        )
+    return config.replace(**overrides) if overrides else config
+
+
+# ---------------------------------------------------------------------------
+# ExecutorConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorConfig:
+    """The sort-executor seam (``core/executor.make_executor``,
+    DESIGN.md §10/§13): which implementation runs the per-partition
+    sorts and how its super-batches are bounded."""
+
+    executor: str = "auto"  # auto | host | batched | per_partition | mesh
+    device_sort: bool = False
+    use_kernels: bool = False
+    batch_slots: int = 0  # 0 -> executor default
+    batch_bytes: int = 0  # 0 -> executor default
+    max_segments: int = 0  # 0 -> executor default
+    mesh: "object | None" = None  # jax Mesh for executor="mesh"
+    axis_names: tuple = ("data",)
+
+    def replace(self, **overrides) -> "ExecutorConfig":
+        return dataclasses.replace(self, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the continuous-batching query server (DESIGN.md §14).
+
+    The admission window is FIFO: a batch dispatches when ``max_batch``
+    requests have coalesced OR the oldest has waited ``max_wait_ms``.
+    ``queue_bound`` is the admission-control depth — submissions beyond
+    it are shed with a typed ``Overloaded`` rejection so p99 stays
+    bounded under open-loop overload instead of queueing without limit.
+    ``cache_bytes`` sizes the LRU hot partition-block cache (0
+    disables).  Transport: ``socket_path`` serves a unix socket,
+    otherwise ``host:port`` TCP (port 0 = ephemeral).
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    queue_bound: int = 1024
+    cache_bytes: int = 64 << 20
+    use_kernels: bool = False
+    host: str = "127.0.0.1"
+    port: int = 0
+    socket_path: "str | None" = None
+    drain_timeout_s: float = 30.0
+
+    def replace(self, **overrides) -> "ServeConfig":
+        return dataclasses.replace(self, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Shared CLI surface (launch/query.py, launch/ops.py, launch/serve.py)
+# ---------------------------------------------------------------------------
+
+
+def add_sort_cli_args(ap) -> None:
+    """Sort knobs shared by every launcher, derived from SortConfig
+    defaults — add once, materialize with sort_config_from_args."""
+    d = SortConfig()
+    ap.add_argument("--budget-mb", type=int,
+                    default=d.memory_budget_bytes >> 20,
+                    help="memory budget for sorts (MB)")
+    ap.add_argument("--readers", type=int, default=d.n_readers,
+                    help="striped reader threads (paper's r)")
+    ap.add_argument("--partitions", type=int, default=d.n_partitions,
+                    help="partition count (0: planner auto-tunes)")
+    ap.add_argument("--sort-executor", default=d.executor,
+                    choices=("auto", "host", "batched", "per_partition"),
+                    help="sort-executor seam selection")
+    ap.add_argument("--partitioner", default=d.partitioner,
+                    choices=("auto", "model", "splitter"),
+                    help="pre-sort planner routing path")
+    ap.add_argument("--workdir", default=d.workdir,
+                    help="spill directory (default: a tempdir)")
+
+
+def sort_config_from_args(args, **overrides) -> SortConfig:
+    """SortConfig from the add_sort_cli_args namespace (+ call-site
+    overrides, e.g. fmt= or manifest=)."""
+    return SortConfig(
+        memory_budget_bytes=args.budget_mb << 20,
+        n_readers=args.readers,
+        n_partitions=args.partitions,
+        executor=args.sort_executor,
+        partitioner=args.partitioner,
+        workdir=args.workdir,
+    ).replace(**overrides)
+
+
+def add_serve_cli_args(ap) -> None:
+    """Server knobs, derived from ServeConfig defaults."""
+    d = ServeConfig()
+    ap.add_argument("--max-batch", type=int, default=d.max_batch,
+                    help="coalescing window: max queries per dispatch")
+    ap.add_argument("--max-wait-ms", type=float, default=d.max_wait_ms,
+                    help="coalescing window: max ms the oldest waits")
+    ap.add_argument("--queue-bound", type=int, default=d.queue_bound,
+                    help="admission queue depth; beyond it requests shed")
+    ap.add_argument("--cache-mb", type=int, default=d.cache_bytes >> 20,
+                    help="LRU partition-block cache budget (0 disables)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="predict through the fused Pallas RMI kernel")
+    ap.add_argument("--host", default=d.host)
+    ap.add_argument("--port", type=int, default=d.port,
+                    help="TCP port (0: ephemeral; ignored with --socket)")
+    ap.add_argument("--socket", default=d.socket_path,
+                    help="serve a unix socket at this path instead of TCP")
+    ap.add_argument("--drain-timeout", type=float, default=d.drain_timeout_s,
+                    help="seconds to wait for in-flight work on shutdown")
+
+
+def serve_config_from_args(args, **overrides) -> ServeConfig:
+    return ServeConfig(
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+        queue_bound=args.queue_bound,
+        cache_bytes=args.cache_mb << 20,
+        use_kernels=args.use_kernels,
+        host=args.host,
+        port=args.port,
+        socket_path=args.socket,
+        drain_timeout_s=args.drain_timeout,
+    ).replace(**overrides)

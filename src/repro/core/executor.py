@@ -601,6 +601,7 @@ class MeshBatchedExecutor(SortExecutor):
 
 def make_executor(
     model: rmi.RMIParams,
+    config=None,
     *,
     device_sort: bool = False,
     use_kernels: bool = False,
@@ -614,6 +615,12 @@ def make_executor(
 ) -> SortExecutor:
     """Build the executor for a sort run.
 
+    ``config`` is the public knob surface
+    (``repro.core.config.ExecutorConfig``); the keyword arguments are
+    the historical spelling and act as overrides on top of it (any
+    non-default keyword wins over the config's value).  ``clock`` is a
+    runtime object, not configuration, and stays a keyword.
+
     ``executor`` selects the implementation: ``"auto"`` (host unless
     ``device_sort``/``use_kernels`` asked for the device path, then
     batched), ``"host"``, ``"batched"``, ``"per_partition"`` (the
@@ -622,6 +629,17 @@ def make_executor(
     inside one ``shard_map`` program; ``mesh``/``axis_names`` supply the
     topology, defaulting to a 1-D mesh over every visible device).
     """
+    if config is not None:
+        device_sort = device_sort or config.device_sort
+        use_kernels = use_kernels or config.use_kernels
+        executor = executor if executor != "auto" else config.executor
+        batch_slots = batch_slots or config.batch_slots
+        batch_bytes = batch_bytes or config.batch_bytes
+        max_segments = max_segments or config.max_segments
+        mesh = mesh if mesh is not None else config.mesh
+        axis_names = (
+            axis_names if axis_names != ("data",) else config.axis_names
+        )
     choice = executor or "auto"
     if choice == "auto":
         choice = "batched" if (device_sort or use_kernels) else "host"

@@ -26,12 +26,14 @@ from __future__ import annotations
 
 import time
 
+from repro.core.config import SortConfig, coerce_sort_config
+
 # Re-exported for compatibility: SortStats began life here and the
 # mergesort/terasort baselines (and external callers) import it from
 # this module.
 from repro.core.pipeline import SortPipelineConfig, SortStats, run_pipeline
 
-__all__ = ["SortStats", "SortPipelineConfig", "sort_file"]
+__all__ = ["SortConfig", "SortStats", "SortPipelineConfig", "sort_file"]
 
 
 class _Timer:
@@ -53,28 +55,21 @@ class _Timer:
 def sort_file(
     input_path: str,
     output_path: str,
-    *,
-    memory_budget_bytes: int = 256 << 20,
-    batch_records: int = 500_000,
-    n_partitions: int = 0,
-    sample_frac: float = 0.01,
-    n_leaf: int = 0,
-    workdir: str | None = None,
-    use_kernels: bool = False,
-    device_sort: bool = False,
-    keep_stats: bool = True,
-    n_readers: int = 1,
-    n_sorters: int = 1,
-    manifest: bool = False,
-    fmt=None,
-    flush_bytes: int = 0,
-    model=None,
-    executor: str = "auto",
-    partitioner: str = "auto",
-    batch_segments: int = 0,
-    model_cache=None,
+    config: "SortConfig | None" = None,
+    **overrides,
 ) -> SortStats:
     """Sort a record file with ELSAR. Returns instrumentation stats.
+
+    The supported call shape is ``sort_file(input, output,
+    config=SortConfig(...), **overrides)`` — every knob lives on
+    :class:`repro.core.config.SortConfig` and keywords on top of an
+    explicit config act as per-call overrides
+    (``dataclasses.replace`` semantics).  The historical bare-keyword
+    shape (``sort_file(input, output, n_readers=2, ...)``) keeps
+    working through :func:`repro.core.config.coerce_sort_config`,
+    which warns ``DeprecationWarning`` once per process; behavior is
+    identical (the legacy grid in ``tests/test_differential.py`` runs
+    through this shim).
 
     ``n_readers`` is the paper's r (§3.2): the number of striped reader
     threads in the partition phase.  Output is byte-identical for every
@@ -131,26 +126,5 @@ def sort_file(
     Reuse never changes the output bytes — only where the partition
     boundaries fall.
     """
-    del keep_stats  # accepted for compatibility; stats are always kept
-    device_sort = device_sort or use_kernels  # kernels imply device path
-    cfg = SortPipelineConfig(
-        n_readers=n_readers,
-        n_sorters=n_sorters,
-        memory_budget_bytes=memory_budget_bytes,
-        batch_records=batch_records,
-        n_partitions=n_partitions,
-        sample_frac=sample_frac,
-        n_leaf=n_leaf,
-        workdir=workdir,
-        use_kernels=use_kernels,
-        device_sort=device_sort,
-        emit_manifest=manifest,
-        fmt=fmt,
-        flush_bytes=flush_bytes,
-        model=model,
-        executor=executor,
-        partitioner=partitioner,
-        batch_segments=batch_segments,
-        model_cache=model_cache,
-    )
-    return run_pipeline(input_path, output_path, cfg)
+    cfg = coerce_sort_config(config, overrides)
+    return run_pipeline(input_path, output_path, cfg.to_pipeline())

@@ -74,6 +74,31 @@ class RecordBlock:
     def record(self, i: int) -> bytes:
         return self.data[self.offsets[i] : self.offsets[i + 1]].tobytes()
 
+    def close(self) -> None:
+        """Release the backing mmap (no-op for owned in-memory blocks).
+
+        Long-lived servers (``serve/index.SortedFileIndex``) reopen
+        manifests on compaction; without this the old file's pages and
+        descriptor lived until GC.  Every array field is replaced by an
+        empty placeholder first so the mmap's buffer has no exports
+        left; a still-borrowed view elsewhere degrades to GC-time
+        release rather than an error."""
+        data, keys = self.data, self.keys
+        kw = keys.shape[1] if keys.ndim == 2 else 0
+        self.data = np.empty(0, np.uint8)
+        self.offsets = np.zeros(1, np.int64)
+        self.keys = np.empty((0, kw), np.uint8)
+        mm, arr = None, data
+        while arr is not None and mm is None:  # walk the view chain
+            mm = getattr(arr, "_mmap", None)
+            arr = getattr(arr, "base", None)
+        del data, keys, arr
+        if mm is not None:
+            try:
+                mm.close()
+            except BufferError:  # a caller still holds a view
+                pass
+
     def slice_bytes(self, lo: int, hi: int) -> bytes:
         """Raw bytes of records ``[lo, hi)`` — contiguous by construction."""
         return self.data[self.offsets[lo] : self.offsets[hi]].tobytes()

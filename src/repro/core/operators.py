@@ -868,18 +868,8 @@ def external_groupby(
 def sort_co_partitioned(
     inputs: "list[str]",
     outputs: "list[str]",
-    *,
-    fmt=None,
-    memory_budget_bytes: int = 256 << 20,
-    n_readers: int = 1,
-    n_partitions: int = 0,
-    sample_frac: float = 0.01,
-    n_leaf: int = 0,
-    workdir: str | None = None,
-    flush_bytes: int = 1 << 20,
-    device_sort: bool = False,
-    use_kernels: bool = False,
-    executor: str = "auto",
+    config=None,
+    **overrides,
 ):
     """Sort N inputs under ONE shared model -> co-partitioned outputs.
 
@@ -889,48 +879,46 @@ def sort_co_partitioned(
     manifest per output.  Returns ``(model, [SortStats, ...])``; the
     outputs are then directly consumable by the operators above.
 
-    ``device_sort`` / ``use_kernels`` / ``executor`` select the sort
-    executor exactly as in ``external.sort_file`` (DESIGN.md §10) — all
-    N inputs run through the same executor configuration, so their
-    outputs stay byte-comparable.
+    Takes the same ``repro.core.config.SortConfig`` (+ field overrides)
+    as ``external.sort_file`` — all N inputs run through the identical
+    configuration, so their outputs stay byte-comparable.  ``model`` and
+    ``n_partitions`` are decided here (the shared-model contract) and
+    override whatever the config carries.
     """
     from repro.core import external
-    from repro.core.pipeline import _train_stage
+    from repro.core.config import coerce_sort_config
+    from repro.core.pipeline import _resolve_fmt, _train_stage
 
     if len(inputs) != len(outputs):
         raise ValueError("inputs and outputs must pair up")
-    use_fmt = fmt if fmt is not None else GENSORT
+    if config is None and "flush_bytes" not in overrides:
+        # historical default: operators flushed at 1 MiB fragments
+        # rather than the pipeline's auto-tuned threshold
+        overrides["flush_bytes"] = 1 << 20
+    cfg = coerce_sort_config(config, overrides, warn=False)
+    use_fmt = _resolve_fmt(cfg.fmt) or GENSORT
     samples = []
     for p in inputs:
         if use_fmt.kind == "fixed":
             n_est = use_fmt.count_records(p)
         else:
             n_est = use_fmt.estimate_n_records(p)
-        samples.append(use_fmt.sample_keys(p, n_est, sample_frac))
-    model = _train_stage(np.concatenate(samples), n_leaf)
+        samples.append(use_fmt.sample_keys(p, n_est, cfg.sample_frac))
+    model = _train_stage(np.concatenate(samples), cfg.n_leaf)
+    n_partitions = cfg.n_partitions
     if n_partitions == 0:
-        target = max(memory_budget_bytes // 4, 1 << 20)
+        target = max(cfg.memory_budget_bytes // 4, 1 << 20)
         n_partitions = max(
             1,
             max(
                 int(np.ceil(os.path.getsize(p) / target)) for p in inputs
             ),
         )
+    cfg = cfg.replace(
+        n_partitions=n_partitions, manifest=True, model=model
+    )
     stats = [
-        external.sort_file(
-            inp, out,
-            memory_budget_bytes=memory_budget_bytes,
-            n_readers=n_readers,
-            n_partitions=n_partitions,
-            workdir=workdir,
-            manifest=True,
-            fmt=fmt,
-            flush_bytes=flush_bytes,
-            model=model,
-            device_sort=device_sort,
-            use_kernels=use_kernels,
-            executor=executor,
-        )
+        external.sort_file(inp, out, cfg)
         for inp, out in zip(inputs, outputs)
     ]
     return model, stats

@@ -65,6 +65,25 @@ from repro.core.stages.queues import put as _put  # noqa: F401
 
 _sort_partition = sort_partition
 
+
+def _resolve_fmt(fmt):
+    """Public-config formats may be named by string: ``"line"`` (default
+    key window), ``"gensort"``/``"fixed"`` (the 100/10 layout).  Format
+    objects and None (sniff/gensort default) pass through."""
+    if not isinstance(fmt, str):
+        return fmt
+    from repro.core.format import LineFormat
+
+    name = fmt.lower()
+    if name == "line":
+        return LineFormat()
+    if name in ("gensort", "fixed"):
+        return GENSORT
+    raise ValueError(
+        f"unknown record format name {fmt!r}: use 'line', 'gensort', "
+        f"or pass a format object from repro.core.format"
+    )
+
 __all__ = [
     "PartitionSpill",
     "PhaseClock",
@@ -122,6 +141,32 @@ class SortPipelineConfig:
     # it stays inside the planner's band; retrain (and store) otherwise.
     # None -> always train.  Inert when ``model`` is pre-trained.
     model_cache: "object | None" = None
+
+    @classmethod
+    def from_sort_config(cls, cfg) -> "SortPipelineConfig":
+        """Compile the public ``repro.core.config.SortConfig`` into this
+        internal runtime config (the only place the two are mapped)."""
+        return cls(
+            n_readers=cfg.n_readers,
+            n_sorters=cfg.n_sorters,
+            memory_budget_bytes=cfg.memory_budget_bytes,
+            batch_records=cfg.batch_records,
+            n_partitions=cfg.n_partitions,
+            sample_frac=cfg.sample_frac,
+            n_leaf=cfg.n_leaf,
+            workdir=cfg.workdir,
+            use_kernels=cfg.use_kernels,
+            # kernels imply the device path, as the legacy kwargs did
+            device_sort=cfg.device_sort or cfg.use_kernels,
+            emit_manifest=cfg.manifest,
+            fmt=_resolve_fmt(cfg.fmt),
+            flush_bytes=cfg.flush_bytes,
+            model=cfg.model,
+            executor=cfg.executor,
+            partitioner=cfg.partitioner,
+            batch_segments=cfg.batch_segments,
+            model_cache=cfg.model_cache,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -267,13 +312,17 @@ def run_pipeline(
     # --- Sort executor (the pluggable seam, DESIGN.md §10).  Batch
     # bounds derive from the memory budget so in-flight super-batches
     # stay within a small multiple of it.
+    from repro.core.config import ExecutorConfig
+
     executor = make_executor(
         model,
-        device_sort=cfg.device_sort,
-        use_kernels=cfg.use_kernels,
-        executor=cfg.executor,
-        batch_bytes=cfg.memory_budget_bytes,
-        max_segments=cfg.batch_segments,
+        ExecutorConfig(
+            executor=cfg.executor,
+            device_sort=cfg.device_sort,
+            use_kernels=cfg.use_kernels,
+            batch_bytes=cfg.memory_budget_bytes,
+            max_segments=cfg.batch_segments,
+        ),
         clock=clock,
     )
     stats.executor = executor.name

@@ -19,13 +19,20 @@ from repro.core.stages.loader import loader_worker
 from repro.core.stages.queues import Abort, get, put
 from repro.core.stages.reader import PartitionSpill, SpillBudget, reader_worker
 from repro.core.stages.sorter import sorter_worker
-from repro.core.stages.stats import PhaseClock, SortStats
+from repro.core.stages.stats import (
+    LatencyReservoir,
+    PhaseClock,
+    ServeStats,
+    SortStats,
+)
 from repro.core.stages.writer import writer_worker
 
 __all__ = [
     "Abort",
+    "LatencyReservoir",
     "PartitionSpill",
     "PhaseClock",
+    "ServeStats",
     "SpillBudget",
     "SortStats",
     "get",

@@ -36,6 +36,7 @@ import os
 import tempfile
 
 from repro.core import operators
+from repro.core.config import add_sort_cli_args, sort_config_from_args
 from repro.core.format import LineFormat
 
 
@@ -45,14 +46,7 @@ def _add_common(ap: argparse.ArgumentParser) -> None:
                     help="newline-delimited records (default: gensort fixed)")
     ap.add_argument("--key-bytes", type=int, default=12,
                     help="key window width for --line inputs")
-    ap.add_argument("--budget-mb", type=int, default=256,
-                    help="memory budget for sorts and operator chunks")
-    ap.add_argument("--readers", type=int, default=1,
-                    help="reader threads per sort (sort-then-operate mode)")
-    ap.add_argument("--partitions", type=int, default=0,
-                    help="shared partition count (0: sized from budget)")
-    ap.add_argument("--workdir", default=None,
-                    help="spill/sorted-run directory (default: a tempdir)")
+    add_sort_cli_args(ap)
     ap.add_argument("--no-manifest", action="store_true",
                     help="skip the output manifest (output not servable)")
 
@@ -74,11 +68,9 @@ def _sorted_inputs(args, raw_paths: "list[str]") -> "list[str]":
     ]
     _, stats = operators.sort_co_partitioned(
         raw_paths, outs,
-        fmt=_fmt(args),
-        memory_budget_bytes=args.budget_mb << 20,
-        n_readers=args.readers,
-        n_partitions=args.partitions,
-        workdir=workdir,
+        sort_config_from_args(
+            args, fmt=_fmt(args), workdir=workdir, flush_bytes=1 << 20
+        ),
     )
     for p, s in zip(raw_paths, stats):
         print(f"[ops] sorted {p} -> {s.n_records} records in "

@@ -26,6 +26,7 @@ import tempfile
 import numpy as np
 
 from repro.core import external
+from repro.core.config import add_sort_cli_args, sort_config_from_args
 from repro.data import gensort
 from repro.serve.index import SortedFileIndex
 from repro.serve.query_engine import QueryEngine
@@ -76,8 +77,7 @@ def main(argv: "list[str] | None" = None) -> None:
                     help="records to generate when no --input/--attach")
     ap.add_argument("--skewed", action="store_true")
     ap.add_argument("--output", help="sorted output path (default: tempdir)")
-    ap.add_argument("--readers", type=int, default=1)
-    ap.add_argument("--budget-mb", type=int, default=256)
+    add_sort_cli_args(ap)
     ap.add_argument("--points", type=int, default=2000)
     ap.add_argument("--ranges", type=int, default=50)
     ap.add_argument("--range-records", type=int, default=1000,
@@ -96,9 +96,10 @@ def main(argv: "list[str] | None" = None) -> None:
               f"err band -{index.manifest.err_lo}/+{index.manifest.err_hi})")
     else:
         inp = args.input
-        workdir = None
+        workdir = args.workdir
         if inp is None:
-            workdir = tempfile.mkdtemp(prefix="elsar_query_")
+            workdir = workdir or tempfile.mkdtemp(prefix="elsar_query_")
+            os.makedirs(workdir, exist_ok=True)
             inp = os.path.join(workdir, "input.bin")
             gensort.write_file(inp, args.records, skewed=args.skewed)
             print(f"[query] generated {args.records} "
@@ -107,10 +108,7 @@ def main(argv: "list[str] | None" = None) -> None:
             workdir or tempfile.mkdtemp(prefix="elsar_query_"), "sorted.bin"
         )
         stats = external.sort_file(
-            inp, out,
-            memory_budget_bytes=args.budget_mb << 20,
-            n_readers=args.readers,
-            manifest=True,
+            inp, out, sort_config_from_args(args, manifest=True)
         )
         print(f"[query] sorted {stats.n_records} records in "
               f"{stats.wall_seconds:.2f}s ({stats.rate_mb_s():.0f} MB/s), "

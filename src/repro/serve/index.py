@@ -36,6 +36,17 @@ from repro.core import encoding, manifest as manifest_lib, rmi
 from repro.core.format import line_keys
 
 
+class _ClosedBlock:
+    """Post-``close()`` placeholder: any record access fails loudly
+    instead of reading through a released mmap."""
+
+    def __getattr__(self, name):
+        raise ValueError("SortedFileIndex is closed")
+
+    def close(self) -> None:
+        pass
+
+
 class SortedFileIndex:
     """Point/range queries over one sorted record file + its manifest."""
 
@@ -94,12 +105,44 @@ class SortedFileIndex:
         mpath = manifest_path or manifest_lib.manifest_path(sorted_path)
         return cls(sorted_path, manifest_lib.load(mpath))
 
+    # -- lifecycle -----------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return isinstance(self._block, _ClosedBlock)
+
+    def close(self) -> None:
+        """Release the mmap deterministically.  A long-lived server
+        reopens manifests on compaction; without an explicit close the
+        old file's pages and descriptor lived until GC.  Idempotent;
+        any query touching record data after close raises
+        ``ValueError``."""
+        blk, self._block = self._block, _ClosedBlock()
+        self.records = None
+        if not isinstance(blk, _ClosedBlock):
+            blk.close()
+
+    def __enter__(self) -> "SortedFileIndex":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- key plumbing --------------------------------------------------
 
     def pad_key(self, raw: bytes) -> bytes:
         """Zero-pad/truncate a raw key (e.g. line content) to the
         format's key window — the form every query key must take."""
         return raw[: self.key_width].ljust(self.key_width, b"\x00")
+
+    def min_key(self) -> bytes:
+        """Padded key of the first record (b"" when empty) — the shard
+        routing key of ``serve/router.ShardRouter``."""
+        return self._key_at(0) if self.n else b""
+
+    def max_key(self) -> bytes:
+        """Padded key of the last record (b"" when empty)."""
+        return self._key_at(self.n - 1) if self.n else b""
 
     def _key_at(self, i: int) -> bytes:
         if self.records is not None:

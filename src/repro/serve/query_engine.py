@@ -25,12 +25,18 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.core.stages.stats import LatencyReservoir
 from repro.serve.index import SortedFileIndex
 
 
 @dataclasses.dataclass
 class QueryStats:
-    """Instrumentation for one query workload (the serving ``SortStats``)."""
+    """Instrumentation for one query workload (the serving ``SortStats``).
+
+    ``latencies_s`` is a bounded :class:`LatencyReservoir` (log-bucket
+    sketch, ±1 bucket percentile accuracy) rather than the historical
+    per-query float list — a long-lived server serves millions of
+    queries per engine and must not grow memory with traffic."""
 
     n_point: int = 0
     n_range: int = 0
@@ -39,7 +45,9 @@ class QueryStats:
     band_hits: int = 0
     fallbacks: int = 0
     phase_seconds: dict = dataclasses.field(default_factory=dict)
-    latencies_s: list = dataclasses.field(default_factory=list)
+    latencies_s: LatencyReservoir = dataclasses.field(
+        default_factory=LatencyReservoir
+    )
     wall_seconds: float = 0.0
 
     @property
@@ -55,9 +63,7 @@ class QueryStats:
         return self.n_queries / max(self.wall_seconds, 1e-9)
 
     def latency_ms(self, pct: float) -> float:
-        if not self.latencies_s:
-            return 0.0
-        return float(np.percentile(np.asarray(self.latencies_s), pct)) * 1e3
+        return self.latencies_s.percentile(pct) * 1e3
 
     def summary(self) -> str:
         return (
@@ -79,9 +85,11 @@ class QueryEngine:
         *,
         n_workers: int = 4,
         use_kernels: bool = False,
+        close_index: bool = False,
     ):
         self.index = index
         self.use_kernels = use_kernels
+        self._close_index = close_index
         self._pool = ThreadPoolExecutor(
             max_workers=max(1, n_workers), thread_name_prefix="elsar-scan"
         )
@@ -95,8 +103,14 @@ class QueryEngine:
     # -- lifecycle -----------------------------------------------------
 
     def close(self) -> None:
+        """Deterministic teardown: join the scan workers, freeze the
+        stats, and (with ``close_index=True``) release the index's mmap
+        — a long-lived server reopens manifests on compaction and must
+        not rely on GC for either."""
         self._pool.shutdown(wait=True)
         self._finish()
+        if self._close_index:
+            self.index.close()
 
     def __enter__(self) -> "QueryEngine":
         return self

@@ -1,0 +1,591 @@
+"""ELSAR-Serve (DESIGN.md §14): the continuous-batching scheduler, the
+partition-block cache, the shard router, and the asyncio server must
+answer byte-identically to a direct ``SortedFileIndex`` — under
+concurrency, graceful drain, and overload shed.  Plus the PR-9
+satellites: ``SortConfig`` legacy-kwarg shim, the bounded latency
+reservoir, and deterministic index close."""
+
+import asyncio
+import binascii
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import external
+from repro.core.config import ServeConfig, SortConfig, coerce_sort_config
+from repro.core.stages.stats import LatencyReservoir, ServeStats
+from repro.data import gensort
+from repro.serve.cache import PartitionBlockCache
+from repro.serve.index import SortedFileIndex
+from repro.serve.router import ShardRouter
+from repro.serve.scheduler import FifoBatchScheduler, Overloaded
+from repro.serve.server import QueryServer
+
+N = 8_000
+
+
+# ---------------------------------------------------------------------------
+# fixtures: one sorted corpus per format, module-scoped
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module", params=["fixed", "line"])
+def sorted_case(request, tmp_path_factory):
+    tmp = str(tmp_path_factory.mktemp(f"serve_{request.param}"))
+    inp = os.path.join(tmp, "in.bin")
+    out = os.path.join(tmp, "out.bin")
+    if request.param == "fixed":
+        gensort.write_file(inp, N, skewed=False)
+        cfg = SortConfig(manifest=True, n_partitions=16)
+    else:
+        rng = np.random.default_rng(7)
+        with open(inp, "wb") as f:
+            for i in range(N):
+                f.write(b"%012d v%s\n"
+                        % (rng.integers(10**9), b"x" * int(i % 5)))
+        cfg = SortConfig(manifest=True, n_partitions=16, fmt="line")
+    external.sort_file(inp, out, cfg)
+    index = SortedFileIndex.open(out)
+    yield index
+    index.close()
+
+
+def _sample_keys(index, n, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = rng.choice(index.n, size=n, replace=True)
+    return [k.tobytes() for k in index.keys_at(rows)]
+
+
+def _rec_bytes(rec):
+    return rec if isinstance(rec, bytes) else \
+        np.ascontiguousarray(rec).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_dispatches_full_batch_without_waiting():
+    async def go():
+        sched = FifoBatchScheduler(max_batch=4, max_wait_s=60.0)
+        for i in range(4):
+            sched.submit("point", i)
+        t0 = time.monotonic()
+        batch = await sched.next_batch()
+        assert time.monotonic() - t0 < 1.0  # did not sit out max_wait
+        assert [r.payload for r in batch] == [0, 1, 2, 3]
+
+    asyncio.run(go())
+
+
+def test_scheduler_dispatches_partial_batch_at_max_wait():
+    async def go():
+        sched = FifoBatchScheduler(max_batch=64, max_wait_s=0.05)
+        sched.submit("point", "lonely")
+        t0 = time.monotonic()
+        batch = await sched.next_batch()
+        dt = time.monotonic() - t0
+        assert len(batch) == 1
+        assert dt >= 0.04  # waited out the window...
+        assert dt < 5.0  # ...but not forever
+
+    asyncio.run(go())
+
+
+def test_scheduler_wait_anchored_on_oldest_request():
+    """A trickle of arrivals must not postpone dispatch: the deadline is
+    the OLDEST request's submit time + max_wait."""
+
+    async def go():
+        sched = FifoBatchScheduler(max_batch=64, max_wait_s=0.08)
+        sched.submit("point", 0)
+        t0 = time.monotonic()
+
+        async def trickle():
+            for i in range(1, 20):
+                await asyncio.sleep(0.02)
+                if sched.closed:
+                    return
+                try:
+                    sched.submit("point", i)
+                except RuntimeError:
+                    return
+
+        task = asyncio.create_task(trickle())
+        batch = await sched.next_batch()
+        dt = time.monotonic() - t0
+        sched.close()
+        await task
+        assert dt < 0.4, "trickle postponed the batch window"
+        assert batch[0].payload == 0
+        sched.abort_pending(RuntimeError("test over"))
+
+    asyncio.run(go())
+
+
+def test_scheduler_fifo_across_batches():
+    async def go():
+        sched = FifoBatchScheduler(max_batch=3, max_wait_s=0.01)
+        for i in range(10):
+            sched.submit("point", i)
+        seen = []
+        while len(seen) < 10:
+            seen += [r.payload for r in await sched.next_batch()]
+        assert seen == list(range(10))
+
+    asyncio.run(go())
+
+
+def test_scheduler_sheds_beyond_queue_bound():
+    async def go():
+        stats = ServeStats()
+        sched = FifoBatchScheduler(
+            max_batch=4, max_wait_s=0.01, max_queue=5, stats=stats
+        )
+        for i in range(5):
+            sched.submit("point", i)
+        with pytest.raises(Overloaded) as exc:
+            sched.submit("point", 99)
+        assert exc.value.depth == 5 and exc.value.bound == 5
+        assert stats.n_shed == 1
+        # shedding does not disturb the queued work
+        batch = await sched.next_batch()
+        assert [r.payload for r in batch] == [0, 1, 2, 3]
+
+    asyncio.run(go())
+
+
+def test_scheduler_close_drains_then_signals_none():
+    async def go():
+        sched = FifoBatchScheduler(max_batch=2, max_wait_s=0.01)
+        for i in range(3):
+            sched.submit("point", i)
+        sched.close()
+        with pytest.raises(RuntimeError):
+            sched.submit("point", 99)
+        assert len(await sched.next_batch()) == 2
+        assert len(await sched.next_batch()) == 1
+        assert await sched.next_batch() is None
+
+    asyncio.run(go())
+
+
+# ---------------------------------------------------------------------------
+# partition-block cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_byte_identity_and_hits(sorted_case):
+    index = sorted_case
+    stats = ServeStats()
+    cache = PartitionBlockCache(64 << 20, stats=stats)
+    keys = np.stack([
+        np.frombuffer(k, dtype=np.uint8)
+        for k in _sample_keys(index, 64, seed=1)
+    ])
+    rows, found = index.lookup(keys)
+    direct = index.fetch_rows(rows, found)
+    cached = cache.fetch_rows(index, rows, found)
+    for d, c in zip(direct, cached):
+        assert _rec_bytes(d) == _rec_bytes(c)
+    assert stats.cache_misses > 0
+    # second pass: everything resident now
+    misses_before = stats.cache_misses
+    cached2 = cache.fetch_rows(index, rows, found)
+    assert stats.cache_misses == misses_before
+    assert stats.cache_hits > 0
+    for d, c in zip(direct, cached2):
+        assert _rec_bytes(d) == _rec_bytes(c)
+    # range materialization spanning several partitions
+    lo, hi = index.n // 5, 4 * index.n // 5
+    assert (
+        np.ascontiguousarray(cache.materialize(index, lo, hi)).tobytes()
+        == np.ascontiguousarray(index.materialize(lo, hi)).tobytes()
+    )
+
+
+def test_cache_eviction_stays_within_budget(sorted_case):
+    index = sorted_case
+    # budget for ~3 real blocks, so filling all partitions must evict
+    probe = PartitionBlockCache(1 << 30).get_block(index, 0)
+    cap = probe.nbytes * 3
+    stats = ServeStats()
+    cache = PartitionBlockCache(cap, stats=stats)
+    for pid in range(index.manifest.n_partitions):
+        cache.get_block(index, pid)
+    assert stats.cache_bytes <= cap
+    assert stats.cache_evictions > 0
+
+
+def test_cache_keyed_by_model_hash(sorted_case, tmp_path):
+    """A re-sorted file (new manifest hash) must never serve stale
+    blocks — same path, different hash -> miss."""
+    index = sorted_case
+    cache = PartitionBlockCache(64 << 20)
+    blk = cache.get_block(index, 0)
+    key_now = (index.path, index.manifest.model_hash, 0)
+    assert key_now in cache._blocks
+    # a hash change (manifest reload after recompaction) misses
+    assert (index.path, "0" * 64, 0) not in cache._blocks
+    dropped = cache.invalidate(model_hash=index.manifest.model_hash)
+    assert dropped >= 1 and key_now not in cache._blocks
+    blk2 = cache.get_block(index, 0)
+    assert _rec_bytes(blk2.data) == _rec_bytes(blk.data)
+
+
+# ---------------------------------------------------------------------------
+# shard router
+# ---------------------------------------------------------------------------
+
+
+def _split_shards(index, tmp_path, n_shards=3):
+    """Cut the sorted corpus into disjoint sorted shard files (each
+    re-sorted so it carries its own manifest)."""
+    tmp_path.mkdir(parents=True, exist_ok=True)
+    paths = []
+    bounds = np.linspace(0, index.n, n_shards + 1).astype(int)
+    for s in range(n_shards):
+        raw = str(tmp_path / f"shard{s}.raw")
+        out = str(tmp_path / f"shard{s}.bin")
+        span = index.materialize(int(bounds[s]), int(bounds[s + 1]))
+        with open(raw, "wb") as f:
+            f.write(np.ascontiguousarray(span).tobytes())
+        external.sort_file(
+            raw, out,
+            SortConfig(manifest=True, n_partitions=4,
+                       fmt=None if index.records is not None else "line"),
+        )
+        paths.append(out)
+    return paths
+
+
+def test_router_point_and_range_routing(sorted_case, tmp_path):
+    index = sorted_case
+    shards = [SortedFileIndex.open(p)
+              for p in _split_shards(index, tmp_path)]
+    try:
+        router = ShardRouter([[s] for s in shards])
+        assert router.n == index.n
+        for key in _sample_keys(index, 50, seed=2):
+            sid = router.shard_for_key(index.pad_key(key))
+            shard = router.pick(sid)
+            rows, found = shard.lookup(
+                np.frombuffer(index.pad_key(key), np.uint8)[None, :]
+            )
+            assert bool(found[0]), "owning shard must contain the key"
+        # a range spanning every shard reassembles the global span
+        lo = index.min_key()
+        hi = index.max_key()
+        parts = router.split_range(lo, hi)
+        assert [sid for sid, _, _ in parts] == list(range(router.n_shards))
+        got = b"".join(
+            np.ascontiguousarray(
+                router.pick(sid).range_scan(s_lo, s_hi)
+            ).tobytes()
+            for sid, s_lo, s_hi in parts
+        )
+        assert got == np.ascontiguousarray(
+            index.materialize(0, index.n)
+        ).tobytes()
+    finally:
+        for s in shards:
+            s.close()
+
+
+def test_router_rejects_interleaved_shards(sorted_case, tmp_path):
+    index = sorted_case
+    paths = _split_shards(index, tmp_path / "dup", n_shards=2)
+    a, b = SortedFileIndex.open(paths[0]), SortedFileIndex.open(paths[1])
+    try:
+        with pytest.raises(ValueError, match="interleave"):
+            # the full corpus overlaps both halves
+            ShardRouter([[index], [a], [b]])
+    finally:
+        a.close()
+        b.close()
+
+
+def test_router_replica_round_robin(sorted_case):
+    index = sorted_case
+    router = ShardRouter([[index, index, index]])
+    picks = [router.pick(0) for _ in range(6)]
+    assert all(p is index for p in picks)  # identical replicas rotate
+    with pytest.raises(ValueError, match="replica mismatch"):
+        # a "replica" carrying a different manifest is refused
+        other = SortedFileIndex.open(index.path)
+        try:
+            object.__setattr__  # appease lint; mutate via __dict__
+            other.n = index.n + 1
+            ShardRouter([[index, other]])
+        finally:
+            other.close()
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end (unix socket)
+# ---------------------------------------------------------------------------
+
+
+async def _client(sock, reqs):
+    reader, writer = await asyncio.open_unix_connection(
+        sock, limit=1 << 24
+    )
+    for r in reqs:
+        writer.write((json.dumps(r) + "\n").encode())
+    await writer.drain()
+    out = [json.loads(await reader.readline()) for _ in reqs]
+    writer.close()
+    await writer.wait_closed()
+    return out
+
+
+def test_server_concurrent_clients_byte_identical(sorted_case, tmp_path):
+    index = sorted_case
+    sock = str(tmp_path / "elsar.sock")
+    hit_keys = _sample_keys(index, 60, seed=3)
+    miss_keys = [b"\x7f" * index.key_width for _ in range(6)]
+    keys = hit_keys + miss_keys
+    lo, hi = min(hit_keys), max(hit_keys)
+
+    async def go():
+        cfg = ServeConfig(max_batch=16, max_wait_ms=1.0, socket_path=sock)
+        server = await QueryServer(index, cfg, own_indexes=False).start()
+        reqs = [
+            {"id": i, "op": "point",
+             "key": binascii.hexlify(k).decode()}
+            for i, k in enumerate(keys)
+        ]
+        reqs.append({"id": "r", "op": "range",
+                     "lo": binascii.hexlify(lo).decode(),
+                     "hi": binascii.hexlify(hi).decode()})
+        groups = [reqs[i::4] for i in range(4)]
+        resps = await asyncio.gather(*[_client(sock, g) for g in groups])
+        await server.stop()
+        return [r for grp in resps for r in grp], server
+
+    flat, server = asyncio.run(go())
+    by_id = {r["id"]: r for r in flat}
+    ref = SortedFileIndex.open(index.path)
+    try:
+        for i, k in enumerate(keys):
+            resp = by_id[i]
+            assert resp["ok"]
+            rows, found = ref.lookup(
+                np.frombuffer(ref.pad_key(k), np.uint8)[None, :]
+            )
+            assert resp["found"] == bool(found[0])
+            if found[0]:
+                exp = _rec_bytes(ref.fetch_rows(rows, found)[0])
+                assert binascii.unhexlify(resp["record"]) == exp
+        exp_range = np.ascontiguousarray(
+            ref.range_scan(lo, hi)
+        ).tobytes()
+        assert binascii.unhexlify(by_id["r"]["data"]) == exp_range
+    finally:
+        ref.close()
+    assert server.stats.n_point == len(keys)
+    assert server.stats.n_range == 1
+    assert server.stats.n_batches >= 1
+
+
+def test_server_graceful_drain_answers_inflight(sorted_case, tmp_path):
+    """stop(drain=True) must answer every admitted request — a slow
+    coalescing window holding requests is not an excuse to drop them."""
+    index = sorted_case
+    keys = _sample_keys(index, 20, seed=4)
+
+    async def go():
+        # huge window: without the drain, these would sit queued
+        cfg = ServeConfig(max_batch=1024, max_wait_ms=60_000.0,
+                          host="", port=0)
+        server = await QueryServer(index, cfg, own_indexes=False).start()
+        futs = [
+            server.scheduler.submit("point", k) for k in keys
+        ]
+        stop_task = asyncio.create_task(server.stop(drain=True))
+        results = await asyncio.gather(*futs)
+        await stop_task
+        return results
+
+    results = asyncio.run(go())
+    assert len(results) == len(keys)
+    assert all(r["ok"] and r["found"] for r in results)
+
+
+def test_server_overload_sheds_not_queues(sorted_case, tmp_path):
+    index = sorted_case
+    keys = _sample_keys(index, 400, seed=5)
+
+    async def go():
+        cfg = ServeConfig(max_batch=8, max_wait_ms=50.0, queue_bound=16,
+                          host="", port=0)
+        server = await QueryServer(index, cfg, own_indexes=False).start()
+        ok, shed = [], 0
+        for k in keys:
+            try:
+                ok.append(server.scheduler.submit("point", k))
+            except Overloaded:
+                shed += 1
+        results = await asyncio.gather(*ok)
+        await server.stop()
+        return results, shed, server.stats
+
+    results, shed, stats = asyncio.run(go())
+    assert shed > 0, "queue bound never engaged"
+    assert stats.n_shed == shed
+    assert len(results) + shed == len(keys)
+    assert all(r["ok"] for r in results)  # admitted work still answered
+
+
+def test_server_routes_across_shards(sorted_case, tmp_path):
+    index = sorted_case
+    shards = [SortedFileIndex.open(p)
+              for p in _split_shards(index, tmp_path / "srv")]
+    keys = _sample_keys(index, 40, seed=6)
+    lo, hi = min(keys), max(keys)
+
+    async def go():
+        cfg = ServeConfig(max_batch=32, max_wait_ms=1.0, host="", port=0)
+        server = await QueryServer(
+            [[s] for s in shards], cfg, own_indexes=True
+        ).start()
+        points = await asyncio.gather(
+            *[server.point(k) for k in keys]
+        )
+        rng = await server.range_scan(lo, hi)
+        await server.stop()  # closes the shard indexes (own_indexes)
+        return points, rng
+
+    points, rng = asyncio.run(go())
+    assert all(p["ok"] and p["found"] for p in points)
+    for k, p in zip(keys, points):
+        rows, found = index.lookup(
+            np.frombuffer(index.pad_key(k), np.uint8)[None, :]
+        )
+        assert p["record"] == _rec_bytes(
+            index.fetch_rows(rows, found)[0]
+        )
+    start, stop = index.range_bounds(lo, hi)
+    assert rng["count"] == stop - start
+    assert rng["data"] == np.ascontiguousarray(
+        index.materialize(start, stop)
+    ).tobytes()
+    assert all(s.closed for s in shards)
+
+
+# ---------------------------------------------------------------------------
+# latency reservoir (QueryStats/ServeStats satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_reservoir_bounded_and_accurate():
+    res = LatencyReservoir()
+    rng = np.random.default_rng(11)
+    xs = rng.lognormal(mean=-7.0, sigma=1.5, size=200_000)
+    res.extend(xs)
+    assert len(res) == xs.shape[0]
+    # constant memory regardless of sample count
+    assert res.counts.nbytes < 4096
+    for pct in (50, 90, 99, 99.9):
+        got = res.percentile(pct)
+        exact = float(np.percentile(xs, pct))
+        # geometric buckets at 24/decade: ~10% relative width
+        assert exact / 1.11 <= got <= exact * 1.11, (pct, got, exact)
+    assert res.percentile(0) == res.min_s
+    assert res.percentile(100) == res.max_s
+
+
+def test_latency_reservoir_list_api():
+    res = LatencyReservoir()
+    assert not res and len(res) == 0
+    res.append(0.001)
+    res.extend([0.002, 0.003])
+    assert res and len(res) == 3
+    assert res.percentile(100) == pytest.approx(0.003)
+    empty = LatencyReservoir()
+    assert empty.percentile(99) == 0.0
+
+
+def test_query_stats_uses_reservoir(sorted_case):
+    from repro.serve.query_engine import QueryEngine
+
+    index = sorted_case
+    keys = np.stack([
+        np.frombuffer(k, np.uint8) for k in _sample_keys(index, 32)
+    ])
+    with QueryEngine(index, n_workers=2) as eng:
+        eng.point(keys)
+    assert isinstance(eng.stats.latencies_s, LatencyReservoir)
+    assert eng.stats.latency_ms(99) > 0
+
+
+# ---------------------------------------------------------------------------
+# index close (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_index_close_is_deterministic(sorted_case, tmp_path):
+    index = SortedFileIndex.open(sorted_case.path)
+    keys = np.frombuffer(
+        index.pad_key(_sample_keys(index, 1)[0]), np.uint8
+    )[None, :]
+    index.lookup(keys)
+    assert not index.closed
+    index.close()
+    assert index.closed
+    index.close()  # idempotent
+    with pytest.raises(ValueError, match="closed"):
+        index.lookup(keys)
+    with SortedFileIndex.open(sorted_case.path) as ctx:
+        ctx.lookup(keys)
+    assert ctx.closed
+
+
+# ---------------------------------------------------------------------------
+# SortConfig API (satellite): legacy kwargs == config, shim warns once
+# ---------------------------------------------------------------------------
+
+
+def test_sort_config_shim_equivalence():
+    legacy = coerce_sort_config(
+        None, dict(memory_budget_bytes=8 << 20, n_readers=2,
+                   manifest=True, keep_stats=True),
+    )
+    explicit = SortConfig(
+        memory_budget_bytes=8 << 20, n_readers=2, manifest=True
+    )
+    assert legacy == explicit
+    # explicit config + kwargs = per-call override, no deprecation
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        over = coerce_sort_config(explicit, dict(n_readers=4))
+    assert over.n_readers == 4 and over.memory_budget_bytes == 8 << 20
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        coerce_sort_config(None, dict(no_such_knob=1))
+    with pytest.raises(TypeError, match="SortConfig"):
+        coerce_sort_config({"memory_budget_bytes": 1}, {})
+
+
+def test_sort_file_legacy_kwargs_still_sort(tmp_path):
+    inp, out_a, out_b = (str(tmp_path / n)
+                         for n in ("in.bin", "a.bin", "b.bin"))
+    gensort.write_file(inp, 2_000, skewed=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = external.sort_file(
+            inp, out_a, memory_budget_bytes=8 << 20, manifest=True,
+            n_partitions=4,
+        )
+    cfg = external.sort_file(
+        out_a and inp, out_b,
+        SortConfig(memory_budget_bytes=8 << 20, manifest=True,
+                   n_partitions=4),
+    )
+    assert legacy.n_records == cfg.n_records == 2_000
+    with open(out_a, "rb") as fa, open(out_b, "rb") as fb:
+        assert fa.read() == fb.read()
