@@ -25,6 +25,14 @@ Four hard gates (exit 1) plus an informational report:
   runner speed), the overload probe must shed (> 0) instead of
   queueing without bound, and its p99 may not exceed 10x the SLO.
   Informational on the first landing (no baseline serve section yet).
+* **writer-pool floor**: when the current run carries
+  ``writer_scaling`` rows (DESIGN.md §15), the widest pool must be
+  >= 1.0x the single-writer rate *within the same run* — the pool may
+  never cost throughput.  Skipped when the rows are marked
+  ``io_bound`` (the single writer already saturates measured disk
+  bandwidth, so there is no headroom to claim); rates are also printed
+  relative to ``disk_bw_mb_s`` so page-cache-fast runners don't fake
+  wins or regressions.
 
 Cross-run absolute sort/query/join *rates* are reported as deltas but
 never gate: shared CI runners are too noisy for wall-clock thresholds,
@@ -43,6 +51,7 @@ RATE_FLOOR = 0.90  # batched rate >= 0.9x per-partition, same run
 CROSSOVER_DRIFT_LIMIT = 2.0  # crossover may not drift past 2x baseline
 SERVE_SPEEDUP_FLOOR = 2.0  # batched capacity >= 2x serial, same run
 SERVE_OVERLOAD_P99_X = 10.0  # overload p99 <= 10x the SLO (shed, don't queue)
+WRITER_POOL_FLOOR = 1.0  # pool rate >= 1.0x single-writer, same run
 
 
 def _executor_row(data: dict, name: str) -> dict:
@@ -181,6 +190,37 @@ def main(argv: "list[str] | None" = None) -> int:
                 )
         else:
             print(f"{line} (no baseline serve section — informational)")
+
+    # writer-pool floor (DESIGN.md §15): a same-run ratio, so no
+    # baseline section is needed — the pool must never cost throughput
+    # against the single writer on the same machine in the same run.
+    # Rates print relative to the measured disk bandwidth; when the
+    # single writer already saturates it (io_bound) the floor would
+    # only be measuring page-cache luck, so it goes informational.
+    wrows = cur.get("writer_scaling") or []
+    if wrows:
+        single = min(wrows, key=lambda r: r["n_writers"])
+        pool = max(wrows, key=lambda r: r["n_writers"])
+        wratio = pool["rate_mb_s"] / max(single["rate_mb_s"], 1e-9)
+        io_bound = bool(single.get("io_bound"))
+        print(
+            f"writer pool: {single['n_writers']}w "
+            f"{single['rate_mb_s']:.1f} -> {pool['n_writers']}w "
+            f"{pool['rate_mb_s']:.1f} MB/s = {wratio:.2f}x "
+            f"(disk {single['disk_bw_mb_s']:.0f} MB/s, rate/bw "
+            f"{single['rate_vs_bw']:.2f} -> {pool['rate_vs_bw']:.2f}"
+            f"{', io_bound — floor informational' if io_bound else ''})"
+        )
+        if (
+            pool["n_writers"] > single["n_writers"]
+            and not io_bound
+            and wratio < WRITER_POOL_FLOOR
+        ):
+            failures.append(
+                f"writer pool costs throughput: {pool['n_writers']} "
+                f"writers at {wratio:.2f}x the single-writer rate "
+                f"(floor {WRITER_POOL_FLOOR}x, same run)"
+            )
 
     # fast-path health: fallbacks on the uniform bench corpus mean the
     # fused graph is not actually running (informational — duplicate-

@@ -35,6 +35,7 @@ def smoke(
     dist: str = "core",
     sweep_sizes: "list[int] | None" = None,
     mesh_n: int = 0,
+    writers: "list[int] | None" = None,
 ) -> None:
     """Collect sort + query + operator + executor rates into one JSON
     artifact (``benchmarks/check_regression.py`` diffs it against the
@@ -67,6 +68,10 @@ def smoke(
         # distributed axis (DESIGN.md §13): host vs mesh-batched final
         # pass over an N-device data mesh (main() fakes the devices)
         data["mesh"] = sort_rates.run_mesh(n, mesh_n)
+    if writers:
+        # storage axis (DESIGN.md §15): writer-pool scaling on the
+        # forced-spill corpus, rates relative to measured disk bandwidth
+        data["writer_scaling"] = sort_rates.run_writers(n, writers)
     with open(json_path, "w") as f:
         json.dump(data, f, indent=2, default=float)
     sort_mb = max(
@@ -90,6 +95,14 @@ def smoke(
         f" mesh_{r['executor']}={r['rate_mb_s']:.1f}MB/s"
         for r in data.get("mesh", ())
     )
+    wrt = ""
+    if data.get("writer_scaling"):
+        wrows = data["writer_scaling"]
+        top = max(wrows, key=lambda r: r["n_writers"])
+        wrt = (
+            f" writers_x{top['n_writers']}={top['vs_single']:.2f}x"
+            f"{'(io_bound)' if top['io_bound'] else ''}"
+        )
     srv = data["serve"]
     print(
         f"bench-smoke: records={n} sort={sort_mb:.1f}MB/s "
@@ -99,7 +112,7 @@ def smoke(
         f"serve={srv['batched_capacity_qps']:.0f}q/s@p99<"
         f"{srv['slo_ms']:.0f}ms ({srv['speedup']:.1f}x serial, "
         f"overload_shed={srv['overload']['shed']})"
-        f"{adv}{xover}{mesh_s} -> {json_path}"
+        f"{adv}{xover}{mesh_s}{wrt} -> {json_path}"
     )
 
 
@@ -174,6 +187,13 @@ def main(argv: "list[str] | None" = None) -> None:
         help="bench-smoke distributed axis: run sort_file_distributed "
         "over an N-device data mesh (fakes N host devices; DESIGN.md §13)",
     )
+    ap.add_argument(
+        "--writers",
+        default=os.environ.get("REPRO_BENCH_WRITERS", ""),
+        metavar="W1,W2,...",
+        help="bench-smoke storage axis: writer-pool widths to scale over "
+        "on the forced-spill corpus (DESIGN.md §15), e.g. 1,4",
+    )
     args = ap.parse_args(argv)
     if args.format not in ("fixed", "line", "all"):
         # argparse does not validate defaults, so a typo'd
@@ -190,9 +210,14 @@ def main(argv: "list[str] | None" = None) -> None:
         if args.records
         else None
     )
+    writers = (
+        sorted({int(s) for s in args.writers.split(",") if s.strip()})
+        if args.writers
+        else None
+    )
     if args.json:
         smoke(n, args.json, dist=args.dist, sweep_sizes=sweep,
-              mesh_n=mesh_n)
+              mesh_n=mesh_n, writers=writers)
         return
     # explicit argv/args: the harness's own sys.argv must never leak into a
     # suite's argparse, and REPRO_BENCH_RECORDS scales every suite that

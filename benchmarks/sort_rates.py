@@ -194,6 +194,60 @@ def run_adversarial(n_records: int, budget=64 << 20) -> list[dict]:
     return rows
 
 
+def run_writers(n_records: int, writers=(1, 4)) -> list[dict]:
+    """Writer-pool scaling rows (DESIGN.md §15): the uniform corpus under
+    a forced-spill budget (a quarter of the corpus, so partition
+    fragments round-trip disk) sorted at each pool width.
+
+    Rates are recorded relative to the measured disk bandwidth
+    (``rate_vs_bw``) so page-cache-fast runners can't fake wins or
+    regressions, and a row set is marked ``io_bound`` when the
+    single-writer rate already saturates measured storage bandwidth —
+    no headroom for the pool to claim, so the CI floor goes
+    informational.  Byte-identity across widths is asserted here, on
+    every bench run."""
+    import hashlib
+
+    path, chk = common.dataset(n_records, False)
+    corpus_bytes = n_records * 100
+    budget = max(1 << 20, corpus_bytes // 4)
+    bw = common.disk_bandwidth_mb_s()
+    rows, digests = [], set()
+    for w in sorted(writers):
+        with tempfile.NamedTemporaryFile(dir=common.CACHE_DIR) as out:
+            stats = external.sort_file(
+                path, out.name, memory_budget_bytes=budget,
+                n_readers=2, n_writers=w,
+            )
+            res = validate.validate_file(out.name, chk, n_records)
+            assert res["ok"], (w, res)
+            h = hashlib.sha256()
+            with open(out.name, "rb") as f:
+                for chunk in iter(lambda: f.read(1 << 20), b""):
+                    h.update(chunk)
+            digests.add(h.hexdigest())
+            rate = stats.rate_mb_s()
+            rows.append({
+                "n_writers": stats.n_writers,
+                "rate_mb_s": rate,
+                "disk_bw_mb_s": bw,
+                "rate_vs_bw": rate / max(bw, 1e-9),
+                "spill_disk_bytes": stats.spill_disk_bytes,
+                "writer_bytes": stats.writer_bytes,
+                "stall_seconds": round(
+                    sum(stats.writer_stall_seconds), 4
+                ),
+                "seconds": stats.wall_seconds or stats.total_seconds,
+            })
+    assert len(digests) == 1, "writer pool changed output bytes"
+    single = min(rows, key=lambda r: r["n_writers"])
+    io_bound = single["rate_mb_s"] >= 0.85 * bw
+    for r in rows:
+        r["vs_single"] = r["rate_mb_s"] / max(single["rate_mb_s"], 1e-9)
+        r["io_bound"] = io_bound
+    return rows
+
+
 def main_line(n_records: int = 1_000_000):
     for r in run_line(n_records):
         common.emit(

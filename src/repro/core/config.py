@@ -50,6 +50,11 @@ class SortConfig:
     device_sort: bool = False
     n_readers: int = 1
     n_sorters: int = 1
+    # writer-pool width for the positioned-write stage (DESIGN.md §15):
+    # 0 -> auto-tuned by the planner from partition count + spill
+    # pressure; 1 reproduces the historical single-writer behavior
+    # byte-for-byte (every width does — offsets are disjoint)
+    n_writers: int = 0
     manifest: bool = False
     fmt: "object | None" = None
     flush_bytes: int = 0
@@ -78,6 +83,7 @@ class SortConfig:
             use_kernels=self.use_kernels,
             batch_bytes=self.memory_budget_bytes,
             max_segments=self.batch_segments,
+            n_writers=self.n_writers,
         )
 
 
@@ -144,6 +150,9 @@ class ExecutorConfig:
     max_segments: int = 0  # 0 -> executor default
     mesh: "object | None" = None  # jax Mesh for executor="mesh"
     axis_names: tuple = ("data",)
+    # width of the WriterPool that drains this executor's sorted stream
+    # (positioned pwrite workers, DESIGN.md §15); 0 -> caller's auto
+    n_writers: int = 0
 
     def replace(self, **overrides) -> "ExecutorConfig":
         return dataclasses.replace(self, **overrides)
@@ -196,6 +205,9 @@ def add_sort_cli_args(ap) -> None:
                     help="memory budget for sorts (MB)")
     ap.add_argument("--readers", type=int, default=d.n_readers,
                     help="striped reader threads (paper's r)")
+    ap.add_argument("--writers", type=int, default=d.n_writers,
+                    help="positioned-write pool width "
+                         "(0: planner auto-tunes)")
     ap.add_argument("--partitions", type=int, default=d.n_partitions,
                     help="partition count (0: planner auto-tunes)")
     ap.add_argument("--sort-executor", default=d.executor,
@@ -214,6 +226,7 @@ def sort_config_from_args(args, **overrides) -> SortConfig:
     return SortConfig(
         memory_budget_bytes=args.budget_mb << 20,
         n_readers=args.readers,
+        n_writers=getattr(args, "writers", 0),
         n_partitions=args.partitions,
         executor=args.sort_executor,
         partitioner=args.partitioner,

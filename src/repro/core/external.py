@@ -76,6 +76,14 @@ def sort_file(
     reader count; > 1 additionally overlaps the partition/sort/write
     phases (visible as ``stats.overlap_seconds > 0``).
 
+    ``n_writers`` sizes the zero-copy positioned-write pool (DESIGN.md
+    §15): partitions are mutually exclusive with precomputed offsets
+    (§3.5), so N workers ``pwrite`` concurrently on one shared fd with
+    no merge and no ordering constraint.  0 = planner-tuned from the
+    partition count and spill pressure; output is byte-identical for
+    every pool width (``SortStats.writer_bytes`` /
+    ``writer_stall_seconds`` record the per-writer split).
+
     ``model`` supplies a pre-trained CDF model (``core/rmi.RMIParams``)
     and skips the sample/train phase.  Sorting several inputs under one
     shared model (with an explicit shared ``n_partitions``) makes their

@@ -117,6 +117,16 @@ class RecordBlock:
     def tobytes(self) -> bytes:
         return self.data[: self.offsets[-1]].tobytes()
 
+    def memview(self) -> memoryview:
+        """Zero-copy buffer of the records' bytes — the writer pool's
+        currency (DESIGN.md §15).  A view over ``data``, not a
+        ``tobytes()`` copy; copies only if the underlying array is
+        non-contiguous (never the case for pipeline-produced blocks)."""
+        d = self.data[: self.offsets[-1]]
+        if not d.flags.c_contiguous:
+            d = np.ascontiguousarray(d)
+        return memoryview(d).cast("B")
+
     def gather_bytes(self, rows: np.ndarray) -> bytes:
         """Raw bytes of the records ``rows`` (any subset, in the given
         order), concatenated — the spill writer of the distributed

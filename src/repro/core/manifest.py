@@ -76,7 +76,9 @@ def model_hash(model: rmi.RMIParams) -> str:
         h.update(f.name.encode())
         h.update(str(a.dtype).encode())
         h.update(str(a.shape).encode())
-        h.update(np.ascontiguousarray(a).tobytes())
+        # buffer-protocol update: hashlib consumes the array's memory
+        # directly, no tobytes() copy of the parameter tables
+        h.update(memoryview(np.ascontiguousarray(a)).cast("B"))
     return h.hexdigest()
 
 

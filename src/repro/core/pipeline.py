@@ -36,9 +36,11 @@ a small multiple of the budget.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import queue
+import shutil
 import tempfile
 import threading
 
@@ -52,10 +54,12 @@ from repro.core.stages import (
     PhaseClock,
     SortStats,
     SpillBudget,
+    WriterPool,
     loader_worker,
     reader_worker,
     sorter_worker,
-    writer_worker,
+    spill_root,
+    writer_worker,  # noqa: F401  (historical import path)
 )
 # Historical import paths (pre-stage-decomposition): callers imported
 # the queue plumbing and the per-partition sort from here.
@@ -104,6 +108,7 @@ class SortPipelineConfig:
 
     n_readers: int = 1  # r in paper §3.2
     n_sorters: int = 1
+    n_writers: int = 0  # positioned-write pool width; 0 -> auto-tuned
     memory_budget_bytes: int = 256 << 20
     batch_records: int = 500_000
     n_partitions: int = 0  # 0 -> auto-tuned from budget + sample
@@ -149,6 +154,7 @@ class SortPipelineConfig:
         return cls(
             n_readers=cfg.n_readers,
             n_sorters=cfg.n_sorters,
+            n_writers=cfg.n_writers,
             memory_budget_bytes=cfg.memory_budget_bytes,
             batch_records=cfg.batch_records,
             n_partitions=cfg.n_partitions,
@@ -196,6 +202,10 @@ def run_pipeline(
             f"n_readers and n_sorters must be >= 1, got "
             f"{cfg.n_readers}/{cfg.n_sorters}"
         )
+    if cfg.n_writers < 0:
+        raise ValueError(
+            f"n_writers must be >= 0 (0 = auto), got {cfg.n_writers}"
+        )
     fmt = cfg.fmt if cfg.fmt is not None else GENSORT
     stats = SortStats()
     clock = PhaseClock()
@@ -242,10 +252,8 @@ def run_pipeline(
         clock.finish(stats)
         return stats
 
-    # --- Alg. 1 line 1: preallocate output (sparse on ext4/xfs)
-    with clock.timer("setup"):
-        with open(output_path, "wb") as f:
-            f.truncate(out_bytes)
+    # (Alg. 1 line 1 — output preallocation — now lives inside the
+    # WriterPool below: posix_fallocate on the pool's shared fd, §15)
 
     # --- Sample + Train stages (Alg. 1 line 2); a pre-trained shared
     # model (co-partitioned multi-input sorts) skips both
@@ -261,6 +269,7 @@ def run_pipeline(
             n_readers=cfg.n_readers,
             explicit_flush=cfg.flush_bytes,
             explicit_segments=cfg.batch_segments,
+            explicit_writers=cfg.n_writers,
         )
     else:
         with clock.timer("train"):
@@ -292,6 +301,7 @@ def run_pipeline(
                 explicit_partitions=cfg.n_partitions,
                 explicit_flush=cfg.flush_bytes,
                 explicit_segments=cfg.batch_segments,
+                explicit_writers=cfg.n_writers,
                 planner_cfg=planner.PlannerConfig(
                     partitioner=cfg.partitioner
                 ),
@@ -307,6 +317,7 @@ def run_pipeline(
         n_partitions=n_partitions,
         flush_bytes=plan.knobs.flush_bytes,
         batch_segments=plan.knobs.batch_segments,
+        n_writers=plan.knobs.n_writers,
     )
 
     # --- Sort executor (the pluggable seam, DESIGN.md §10).  Batch
@@ -333,7 +344,7 @@ def run_pipeline(
     # RAM-first under a shared budget (half the memory budget, §12):
     # fragments that fit wait in memory, the overflow hits disk exactly
     # as before — content and order are placement-independent.
-    tmp = tempfile.mkdtemp(prefix="elsar_", dir=cfg.workdir)
+    tmp = tempfile.mkdtemp(prefix="elsar_", dir=spill_root(cfg.workdir))
     spill_ram = SpillBudget(cfg.memory_budget_bytes // 2)
     spills = [
         PartitionSpill(os.path.join(tmp, f"p{j:05d}.bin"), ram=spill_ram)
@@ -377,15 +388,18 @@ def run_pipeline(
         )
         for i in range(n_sorters)
     ]
-    writer = threading.Thread(
-        target=writer_worker,
-        args=(clock, output_path, write_q, n_sorters, abort, errors),
-        name="elsar-writer",
-        daemon=True,
-    )
+    # the WriterPool owns output creation + preallocation (Alg. 1
+    # line 1: posix_fallocate on the shared fd, truncate fallback) and
+    # runs cfg.n_writers positioned pwrite workers (DESIGN.md §15)
+    with clock.timer("setup"):
+        pool = WriterPool(
+            clock, output_path, write_q, n_sorters, abort, errors,
+            n_writers=cfg.n_writers or 1, out_bytes=out_bytes,
+        )
 
-    for t in [loader, writer, *sorters, *readers]:
+    for t in [loader, *sorters, *readers]:
         t.start()
+    pool.start()
     for t in readers:
         t.join()
     for spill in spills:
@@ -408,10 +422,20 @@ def run_pipeline(
             )
         )
     partition_done.set()
-    for t in [loader, *sorters, writer]:
+    for t in [loader, *sorters]:
         t.join()
+    pool.join()
+    stats.n_writers = pool.n_writers
+    stats.writer_bytes = list(pool.writer_bytes)
+    stats.writer_stall_seconds = list(pool.writer_stall_seconds)
 
     if errors:
+        # a failed sort leaves nothing behind: undrained spill fragments
+        # and the partial (preallocated) output go before the error
+        # surfaces, so callers never mistake a partial file for sorted
+        shutil.rmtree(tmp, ignore_errors=True)
+        with contextlib.suppress(OSError):
+            os.unlink(output_path)
         raise errors[0]
     os.rmdir(tmp)
     stats.fallbacks += executor.fallbacks

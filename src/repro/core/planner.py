@@ -65,6 +65,7 @@ from repro.core import encoding, rmi
 MIN_FLUSH_BYTES = 32 << 10
 MAX_FLUSH_BYTES = 1 << 20
 MAX_BATCH_SEGMENTS = 32  # mirrors executor.MAX_SEGMENTS
+MAX_WRITERS = 8  # writer-pool ceiling: past this, pwrite queues collide
 _PART_BYTES_FLOOR = 1 << 20  # partitions never sized below 1 MB
 
 
@@ -105,6 +106,7 @@ class TunedKnobs:
     n_partitions: int
     flush_bytes: int
     batch_segments: int
+    n_writers: int = 1
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -285,9 +287,11 @@ def tune_knobs(
     explicit_partitions: int = 0,
     explicit_flush: int = 0,
     explicit_segments: int = 0,
+    explicit_writers: int = 0,
 ) -> TunedKnobs:
     """Auto-tune ``n_partitions`` / ``flush_bytes`` / ``batch_segments``
-    from the budget and the sample; explicit (non-zero) values win."""
+    / ``n_writers`` from the budget and the sample; explicit (non-zero)
+    values win."""
     part_target = max(memory_budget_bytes // 4, _PART_BYTES_FLOOR)
     n_partitions = explicit_partitions or max(
         1, -(-int(file_bytes) // part_target)
@@ -309,10 +313,22 @@ def tune_knobs(
     segments = explicit_segments or max(
         1, min(MAX_BATCH_SEGMENTS, n_partitions)
     )
+    # writer-pool width (DESIGN.md §15): positioned writes are
+    # embarrassingly parallel (§3.5), but extra writers only pay when
+    # the sort round-trips real storage — i.e. under spill pressure,
+    # when the corpus overflows the RAM spill budget (half the memory
+    # budget) and output writeback competes with spill re-reads.  Under
+    # pressure scale with the partition count up to MAX_WRITERS; without
+    # it two writers suffice to hide the occasional writeback stall.
+    spill_pressure = file_bytes > memory_budget_bytes // 2
+    writers = explicit_writers or min(
+        max(n_partitions, 1), MAX_WRITERS if spill_pressure else 2
+    )
     return TunedKnobs(
         n_partitions=int(n_partitions),
         flush_bytes=int(flush),
         batch_segments=int(min(max(segments, 1), MAX_BATCH_SEGMENTS)),
+        n_writers=int(max(writers, 1)),
     )
 
 
@@ -326,6 +342,7 @@ def plan_sort(
     explicit_partitions: int = 0,
     explicit_flush: int = 0,
     explicit_segments: int = 0,
+    explicit_writers: int = 0,
     planner_cfg: PlannerConfig | None = None,
 ) -> SortPlan:
     """The full pre-sort plan: diagnose -> choose -> tune -> build."""
@@ -339,6 +356,7 @@ def plan_sort(
         explicit_partitions=explicit_partitions,
         explicit_flush=explicit_flush,
         explicit_segments=explicit_segments,
+        explicit_writers=explicit_writers,
     )
     decision, reason = choose_partitioner(
         diag, knobs.n_partitions, planner_cfg
@@ -371,12 +389,13 @@ def preplanned(
     n_readers: int = 1,
     explicit_flush: int = 0,
     explicit_segments: int = 0,
+    explicit_writers: int = 0,
 ) -> SortPlan:
     """Plan for a sort under a pre-trained shared model (co-partitioned
     multi-input sorts, DESIGN.md §9): the partitioner MUST be the shared
     model — a splitter would break partition alignment — and
-    ``n_partitions`` is the caller's shared value.  Only the spill and
-    batch knobs are tuned."""
+    ``n_partitions`` is the caller's shared value.  Only the spill,
+    batch, and writer knobs are tuned."""
     knobs = tune_knobs(
         file_bytes=file_bytes,
         memory_budget_bytes=memory_budget_bytes,
@@ -384,6 +403,7 @@ def preplanned(
         explicit_partitions=max(n_partitions, 1),
         explicit_flush=explicit_flush,
         explicit_segments=explicit_segments,
+        explicit_writers=explicit_writers,
     )
     return SortPlan(
         decision="model",

@@ -8,7 +8,7 @@ plus the shared plumbing:
 * :mod:`repro.core.stages.reader` — striped reader pool + ``PartitionSpill``
 * :mod:`repro.core.stages.loader` — eager fragment drain / block parsing
 * :mod:`repro.core.stages.sorter` — queue→``SortExecutor`` stream driver
-* :mod:`repro.core.stages.writer` — positioned coalesced writes
+* :mod:`repro.core.stages.writer` — zero-copy parallel positioned writes
 
 The orchestrator (``repro.core.pipeline.run_pipeline``) wires them
 together; the sort implementation itself lives behind the
@@ -17,7 +17,12 @@ together; the sort implementation itself lives behind the
 
 from repro.core.stages.loader import loader_worker
 from repro.core.stages.queues import Abort, get, put
-from repro.core.stages.reader import PartitionSpill, SpillBudget, reader_worker
+from repro.core.stages.reader import (
+    PartitionSpill,
+    SpillBudget,
+    reader_worker,
+    spill_root,
+)
 from repro.core.stages.sorter import sorter_worker
 from repro.core.stages.stats import (
     LatencyReservoir,
@@ -25,7 +30,7 @@ from repro.core.stages.stats import (
     ServeStats,
     SortStats,
 )
-from repro.core.stages.writer import writer_worker
+from repro.core.stages.writer import WriterPool, writer_worker
 
 __all__ = [
     "Abort",
@@ -35,10 +40,12 @@ __all__ = [
     "ServeStats",
     "SpillBudget",
     "SortStats",
+    "WriterPool",
     "get",
     "loader_worker",
     "put",
     "reader_worker",
     "sorter_worker",
+    "spill_root",
     "writer_worker",
 ]

@@ -53,7 +53,8 @@ def loader_worker(
             """Prefetch committed fragments for partitions in the window
             after ``start``; stops at the byte cap."""
             progressed, budget = 0, ahead_bytes
-            for k in range(start, min(start + window, n_parts)):
+            stop = min(start + window, n_parts)
+            for k in range(start, stop):
                 budget -= spills[k].n_bytes
                 if budget < 0 and k > start:
                     break
@@ -63,6 +64,11 @@ def loader_worker(
                     if not got:
                         t.discard()  # idle poll, not sort_read work
                 progressed += got
+            # fadvise SEQUENTIAL+WILLNEED one window further out (§15):
+            # the kernel warms disk-overflow pages for window k+1 while
+            # window k's preads are in flight — pure hint, no bytes read
+            for k in range(stop, min(stop + window, n_parts)):
+                spills[k].advise()
             return progressed
 
         while emit < n_parts and not abort.is_set():

@@ -20,6 +20,50 @@ import numpy as np
 from repro.core.stages.queues import Abort
 from repro.core.stages.stats import PhaseClock
 
+_HAVE_FADVISE = hasattr(os, "posix_fadvise")
+
+# Disk-overflow writes drop their page-cache ranges in batches this
+# large: per-fragment advise calls on 32 KB fragments would be syscall
+# noise, and dirty-page writeback only engages on meaningful spans.
+_SPILL_DONTNEED_BATCH = 4 << 20
+
+
+def spill_root(workdir: "str | None", *, per_host: bool = False) -> "str | None":
+    """Resolve spill placement: an explicit ``workdir`` wins, else the
+    ``REPRO_SPILL_DIR`` environment knob (NVMe-aware placement at pod
+    scale — point it at node-local flash), else ``None`` (the system
+    tempdir).  ``per_host`` appends a ``host<k>`` subdir keyed by the
+    jax process index so multi-host pods sharing a path never collide
+    and each process spills to storage it owns."""
+    root = workdir or os.environ.get("REPRO_SPILL_DIR") or None
+    if root is None:
+        return None
+    if per_host:
+        try:
+            import jax
+
+            k = int(jax.process_index())
+        except Exception:  # jax not initialized / single-process
+            k = 0
+        root = os.path.join(root, f"host{k:03d}")
+    os.makedirs(root, exist_ok=True)
+    return root
+
+
+def _writev_all(fd: int, pieces) -> int:
+    """Vectored write of every piece (writev may be partial); retry
+    slices are memoryviews, so nothing is ever joined or copied."""
+    bufs = [memoryview(p) for p in pieces if len(p)]
+    total = sum(len(b) for b in bufs)
+    while bufs:
+        n = os.writev(fd, bufs)
+        while bufs and n >= len(bufs[0]):
+            n -= len(bufs[0])
+            bufs.pop(0)
+        if n:
+            bufs[0] = bufs[0][n:]
+    return total
+
 
 class SpillBudget:
     """Shared byte budget for RAM-resident spill fragments (§12).
@@ -77,49 +121,119 @@ class PartitionSpill:
     def __init__(self, path: str, ram: "SpillBudget | None" = None):
         self.path = path
         self._lock = threading.Lock()
-        self._f = None
+        self._wfd = -1  # raw write fd (vectored zero-copy appends)
         self._file_pos = 0  # disk offset of the next disk fragment
+        self._dontneed_from = 0  # start of the not-yet-advised dirty range
         self._total = 0  # all fragment bytes, RAM + disk
         self.n_records = 0
         # (stripe, seq, off, len); off == -1 marks a RAM-resident blob
         self.segments: list[tuple[int, int, int, int]] = []
-        self._mem: dict[int, bytes] = {}  # segment index -> RAM blob
+        # segment index -> tuple of fragment pieces (RAM-resident)
+        self._mem: dict[int, tuple] = {}
         self._ram = ram
         self._loaded: dict[int, bytes] = {}  # loader-thread-only
         self._n_seen = 0  # loader-side fast-path cursor
         self._read_fd = -1
+        self._advised_to = 0  # WILLNEED high-water mark (loader-side)
 
     @property
     def n_bytes(self) -> int:
         return self._total
 
     # -- writer side (reader pool) ------------------------------------
-    def append(self, stripe: int, seq: int, blob: bytes, n_records: int) -> None:
+    def append(self, stripe: int, seq: int, blob, n_records: int) -> None:
+        """Append one fragment.  ``blob`` is a bytes-like or a list of
+        bytes-like pieces (the reader's coalescing buffer, handed over
+        as-is): RAM-resident fragments keep the pieces unjoined, disk
+        overflow writes them zero-copy via ``writev``.  The join — one
+        per partition, unavoidable — happens in :meth:`take`."""
+        pieces = (
+            tuple(blob) if isinstance(blob, (list, tuple)) else (blob,)
+        )
+        nbytes = sum(len(p) for p in pieces)
         with self._lock:
             idx = len(self.segments)
-            if self._ram is not None and self._ram.try_take(len(blob)):
-                self._mem[idx] = blob
-                self.segments.append((stripe, seq, -1, len(blob)))
+            if self._ram is not None and self._ram.try_take(nbytes):
+                self._mem[idx] = pieces
+                self.segments.append((stripe, seq, -1, nbytes))
             else:
-                if self._f is None:
-                    self._f = open(self.path, "wb", buffering=0)
-                self._f.write(blob)
+                if self._wfd < 0:
+                    self._wfd = os.open(
+                        self.path,
+                        os.O_WRONLY | os.O_CREAT | os.O_TRUNC,
+                        0o600,
+                    )
+                _writev_all(self._wfd, pieces)
                 self.segments.append(
-                    (stripe, seq, self._file_pos, len(blob))
+                    (stripe, seq, self._file_pos, nbytes)
                 )
-                self._file_pos += len(blob)
+                self._file_pos += nbytes
                 if self._ram is not None:
-                    self._ram.disk_bytes += len(blob)
-            self._total += len(blob)
+                    self._ram.disk_bytes += nbytes
+                # overflow bytes were *rejected* from the RAM budget —
+                # don't let the page cache double-hold them; the loader
+                # WILLNEEDs them back one window ahead of its reads
+                if (
+                    _HAVE_FADVISE
+                    and self._file_pos - self._dontneed_from
+                    >= _SPILL_DONTNEED_BATCH
+                ):
+                    try:
+                        os.posix_fadvise(
+                            self._wfd,
+                            self._dontneed_from,
+                            self._file_pos - self._dontneed_from,
+                            os.POSIX_FADV_DONTNEED,
+                        )
+                    except OSError:
+                        pass
+                    self._dontneed_from = self._file_pos
+            self._total += nbytes
             self.n_records += n_records
 
     def close_writer(self) -> None:
         with self._lock:
-            if self._f is not None:
-                self._f.close()
-                self._f = None
+            if self._wfd >= 0:
+                os.close(self._wfd)
+                self._wfd = -1
 
     # -- loader side (single thread) ----------------------------------
+    def _open_read_fd(self) -> int:
+        if self._read_fd < 0:
+            self._read_fd = os.open(self.path, os.O_RDONLY)
+            if _HAVE_FADVISE:
+                try:
+                    os.posix_fadvise(
+                        self._read_fd, 0, 0, os.POSIX_FADV_SEQUENTIAL
+                    )
+                except OSError:
+                    pass
+        return self._read_fd
+
+    def advise(self) -> None:
+        """Hint upcoming reads of committed disk fragments (§15):
+        SEQUENTIAL once at open, WILLNEED over the not-yet-read tail.
+        The loader calls this one window beyond its prefetch window, so
+        the kernel warms pages while the current window's reads are
+        still in flight.  Pure hint — a no-op without disk fragments."""
+        if not _HAVE_FADVISE:
+            return
+        with self._lock:
+            end = self._file_pos
+        if end <= self._advised_to:
+            return
+        try:
+            fd = self._open_read_fd()
+            os.posix_fadvise(
+                fd,
+                self._advised_to,
+                end - self._advised_to,
+                os.POSIX_FADV_WILLNEED,
+            )
+        except OSError:
+            return
+        self._advised_to = end
+
     def prefetch(self) -> int:
         """Make committed-but-unseen fragments loadable; returns the
         fresh bytes (disk reads + newly visible RAM fragments)."""
@@ -131,9 +245,8 @@ class PartitionSpill:
             if off < 0:  # RAM-resident: already loaded, count once
                 done += nbytes
                 continue
-            if self._read_fd < 0:
-                self._read_fd = os.open(self.path, os.O_RDONLY)
-            self._loaded[i] = os.pread(self._read_fd, nbytes, off)
+            fd = self._open_read_fd()
+            self._loaded[i] = os.pread(fd, nbytes, off)
             done += nbytes
         self._n_seen = committed
         return done
@@ -157,12 +270,17 @@ class PartitionSpill:
             os.unlink(self.path)
         if not order:
             return None, fresh
-        blob = b"".join(
-            self._mem[i] if self.segments[i][2] < 0 else self._loaded[i]
-            for i in order
-        )
+        parts: list = []
+        for i in order:
+            if self.segments[i][2] < 0:
+                parts.extend(self._mem[i])
+            else:
+                parts.append(self._loaded[i])
+        blob = b"".join(parts)
         if self._ram is not None and self._mem:
-            self._ram.release(sum(len(b) for b in self._mem.values()))
+            self._ram.release(
+                sum(self.segments[i][3] for i in self._mem)
+            )
         self._mem.clear()
         self._loaded.clear()
         return blob, fresh
@@ -216,13 +334,18 @@ def reader_worker(
 
                 def flush(j: int) -> None:
                     nonlocal total
-                    blob = b"".join(bufs.pop(j))
-                    total -= buf_bytes.pop(j)
+                    # pieces hand over unjoined: the spill layer writevs
+                    # disk overflow zero-copy and keeps RAM fragments as
+                    # piece lists — the per-partition join happens once,
+                    # in take()
+                    pieces = bufs.pop(j)
+                    nbytes = buf_bytes.pop(j)
+                    total -= nbytes
                     spills[j].append(
-                        stripe.index, seqs.get(j, 0), blob, buf_recs.pop(j)
+                        stripe.index, seqs.get(j, 0), pieces, buf_recs.pop(j)
                     )
                     seqs[j] = seqs.get(j, 0) + 1
-                    clock.add_io(written=len(blob))
+                    clock.add_io(written=nbytes)
 
                 for block in fmt.iter_batches(
                     input_path, stripe, cfg.batch_records

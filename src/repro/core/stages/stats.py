@@ -144,6 +144,13 @@ class SortStats:
     # spill fragments that overflowed the RAM budget to disk (physical
     # write bytes; the logical spill traffic stays in bytes_written)
     spill_disk_bytes: int = 0
+    # writer-pool accounting (DESIGN.md §15): pool width, bytes each
+    # positioned writer issued, and each writer's cumulative queue-wait
+    # seconds — near-equal bytes with stall-dominated waits means the
+    # disk path is saturated; starved writers point at the sorters
+    n_writers: int = 1
+    writer_bytes: list = dataclasses.field(default_factory=list)
+    writer_stall_seconds: list = dataclasses.field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:

@@ -43,8 +43,10 @@ from __future__ import annotations
 
 import contextlib
 import os
+import queue
 import shutil
 import tempfile
+import threading
 
 import numpy as np
 import jax
@@ -55,7 +57,10 @@ from repro.core import encoding, rmi
 from repro.core import manifest as manifest_lib
 from repro.core.executor import make_executor
 from repro.core.format import GENSORT, RecordFormat
+from repro.core.stages.queues import Abort, put
+from repro.core.stages.reader import spill_root
 from repro.core.stages.stats import PhaseClock, SortStats
+from repro.core.stages.writer import WriterPool
 
 
 def sort_file_distributed(
@@ -73,14 +78,20 @@ def sort_file_distributed(
     use_kernels: bool = False,
     executor: str = "auto",
     manifest: bool = False,
+    n_writers: int = 0,
 ) -> SortStats:
     """Sort a record file using the pod as the partitioning engine.
 
     ``executor`` selects the final-pass range sorter through the shared
     ``SortExecutor`` seam; ``"mesh"`` runs the fused batched graph per
-    device inside a ``shard_map`` program over ``mesh`` itself.  All
-    temp state (range spills, the output handle) is cleaned up on any
-    failure; a partial output file is removed rather than left behind.
+    device inside a ``shard_map`` program over ``mesh`` itself.  Range
+    spills land under ``workdir``, or the ``REPRO_SPILL_DIR``
+    environment knob with a per-host subdir (NVMe-aware placement on
+    multi-host pods), or the system tempdir.  The final range pass
+    drains through the zero-copy :class:`WriterPool` (DESIGN.md §15);
+    ``n_writers=0`` sizes the pool from the device count.  All temp
+    state (range spills, the output fd) is cleaned up on any failure; a
+    partial output file is removed rather than left behind.
     """
     stats = SortStats()
     clock = PhaseClock()
@@ -106,10 +117,13 @@ def sort_file_distributed(
     # --- chunk loop: pod partitions each chunk to its owner devices
     chunk_records = max((chunk_records // n_dev) * n_dev, n_dev)
     sh = NamedSharding(mesh, P(axis_names))
-    tmp = tempfile.mkdtemp(prefix="terasort_", dir=workdir)
+    # per-host spill placement (§15): REPRO_SPILL_DIR (or workdir) with
+    # a host<k> subdir, so each process of a pod spills to storage it
+    # owns — typically node-local NVMe — instead of a shared tempdir
+    sroot = spill_root(workdir, per_host=True)
+    tmp = tempfile.mkdtemp(prefix="terasort_", dir=sroot)
     range_paths = [os.path.join(tmp, f"r{d:05d}.bin") for d in range(n_dev)]
     range_files: list = []
-    out = None
     created_output = False
     ok = False
     try:
@@ -186,9 +200,6 @@ def sort_file_distributed(
         # with in-flight sorts.
         stats.partition_counts = list(range_counts)
         offsets = np.concatenate([[0], np.cumsum(range_bytes)[:-1]])
-        with open(output_path, "wb") as fh:
-            fh.truncate(int(sum(range_bytes)))
-        created_output = True
 
         ex = make_executor(
             model,
@@ -213,14 +224,37 @@ def sort_file_distributed(
                 # parse_blob only needs the buffer protocol — no copy
                 yield int(offsets[d]), fmt.parse_blob(blob)
 
-        out = open(output_path, "r+b")
-        for at, block in ex.sort_iter(ranges()):
-            with clock.timer("write"):
-                out.seek(at)
-                out.write(block.tobytes())
-                stats.bytes_written += block.n_bytes
-        out.close()
-        out = None
+        # the sorted ranges drain through the zero-copy writer pool
+        # (§15): the pool owns creation + preallocation of the output,
+        # and positioned pwrites let range d+1's write overlap range
+        # d+2's sort — ranges are disjoint by construction, so any
+        # arrival order is safe
+        write_q: queue.Queue = queue.Queue(maxsize=4)
+        abort = threading.Event()
+        werrors: list = []
+        pool = WriterPool(
+            clock, output_path, write_q, 1, abort, werrors,
+            n_writers=n_writers or max(1, min(4, n_dev)),
+            out_bytes=int(sum(range_bytes)),
+        )
+        created_output = True
+        pool.start()
+        try:
+            for at, block in ex.sort_iter(ranges()):
+                put(write_q, (int(at), block), abort)
+            put(write_q, None, abort)
+        except Abort:
+            pass  # a writer failed; its error re-raises below
+        except BaseException:
+            abort.set()  # release writers blocked on the queue
+            raise
+        finally:
+            pool.join()
+        if werrors:
+            raise werrors[0]
+        stats.n_writers = pool.n_writers
+        stats.writer_bytes = list(pool.writer_bytes)
+        stats.writer_stall_seconds = list(pool.writer_stall_seconds)
         stats.fallbacks += ex.fallbacks
 
         if manifest:
@@ -234,14 +268,18 @@ def sort_file_distributed(
         ok = True
     finally:
         # no resource outlives a failure: spill files and the spill dir
-        # go unconditionally, the output handle is closed, and a partial
-        # output file is removed rather than left looking sorted
+        # go unconditionally (the writer pool closes its own fd in
+        # join), and a partial output file is removed rather than left
+        # looking sorted
         for f in range_files:
             if not f.closed:
                 f.close()
-        if out is not None:
-            out.close()
         shutil.rmtree(tmp, ignore_errors=True)
+        if sroot is not None:
+            # the host<k> subdir spill_root created is ours too; rmdir
+            # only succeeds when empty, so concurrent runs keep theirs
+            with contextlib.suppress(OSError):
+                os.rmdir(sroot)
         if not ok and created_output:
             with contextlib.suppress(OSError):
                 os.unlink(output_path)
